@@ -1,0 +1,39 @@
+"""Paper §5.3.4 (Fig 13): neuron-importance profiling method comparison —
+which of the four metrics (Eqs. 14-17) yields the lowest 2T-Drop error."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import drop, gating, moe, reconstruct
+from repro.data import pipeline
+from repro.models.layers import split_params
+
+from .common import Row, rel_err, sharp_router_params
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    key = jax.random.PRNGKey(6)
+    for name in ("mixtral-8x7b-lite", "dsv2-lite-lite"):
+        cfg = get_config(name)
+        params, _ = split_params(moe.make_moe_params(key, cfg))
+        params = sharp_router_params(params)
+        calib = pipeline.calibration_activations(jax.random.fold_in(key, 1),
+                                                 512, cfg.d_model)
+        x = pipeline.calibration_activations(jax.random.fold_in(key, 2),
+                                             512, cfg.d_model)
+        y0 = moe.moe_forward_ref(params, x, cfg)
+        r = gating.route(x, params["wg"], cfg.top_k, cfg.router_norm_topk)
+        t1 = float(jnp.quantile(r.norm_score, 0.25))
+        gap = max(min(0.01, t1 * 0.2), 1e-4)
+        pairs = drop.expand_pairs_2t(r.idx, r.combine, r.norm_score, 2,
+                                     t1 - gap, t1 + gap)
+        for method in reconstruct.IMPORTANCE_METHODS:
+            rec = reconstruct.partition_and_reconstruct(params, calib, cfg,
+                                                        p=2, method=method)
+            y = moe.moe_forward_ref(rec, x, cfg, pairs=pairs)
+            rows.append((f"importance/{name}/{method}", 0.0,
+                         f"rel_err={rel_err(y, y0):.4f}"))
+    return rows

@@ -1,0 +1,68 @@
+"""§Roofline: the per-(arch x shape) three-term roofline table, read from
+the dry-run sweep (results/dryrun.jsonl, single-pod mesh)."""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import INPUT_SHAPES, get_config
+
+from .common import Row
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "dryrun.jsonl")
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); D = tokens.
+    Decode steps process global_batch tokens; train includes backward (3x
+    forward's 2ND)."""
+    n = cfg.n_params()
+    if cfg.is_moe:
+        dense_part = n - cfg.n_layers * cfg.n_experts * 3 * cfg.d_model * \
+            cfg.d_expert
+        active = dense_part + cfg.n_layers * (cfg.top_k + cfg.n_shared_experts) \
+            * 3 * cfg.d_model * cfg.d_expert
+    else:
+        active = n
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    return 2.0 * active * shape.global_batch      # decode: one token/seq
+
+
+def load_records():
+    recs = [json.loads(l) for l in open(RESULTS)]
+    return [r for r in recs if r.get("mesh") == "16x16"]
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    if not os.path.exists(RESULTS):
+        return [("roofline/missing", 0.0,
+                 "run: python -m repro.launch.dryrun --all --out "
+                 "results/dryrun.jsonl")]
+    for r in load_records():
+        name = f"roofline/{r['arch']}/{r['shape']}"
+        if r["status"] != "ok":
+            rows.append((name, 0.0, r["status"]))
+            continue
+        rt = r["roofline"]
+        terms = {"compute": rt["t_compute"], "memory": rt["t_memory"],
+                 "collective": rt["t_collective"]}
+        bottleneck = max(terms, key=terms.get)
+        cfg = get_config(r["arch"])
+        shape = INPUT_SHAPES[r["shape"]]
+        mf = model_flops(cfg, shape)
+        hlo_global = r["flops"] * r["n_chips"]
+        ratio = mf / hlo_global if hlo_global else float("nan")
+        rows.append((name, terms[bottleneck] * 1e6,
+                     f"t_comp={rt['t_compute']:.2e}s "
+                     f"t_mem={rt['t_memory']:.2e}s "
+                     f"t_coll={rt['t_collective']:.2e}s "
+                     f"bottleneck={bottleneck} "
+                     f"model/hlo_flops={ratio:.2f}"))
+    return rows

@@ -1,0 +1,94 @@
+"""Paper Table 3: comparison with prior work — EES (Efficient Expert
+Skipping) and EEP (Efficient Expert Pruning) [Lu et al., 2024], both
+implemented here, vs 2T-Drop (partition / reconstruct).
+
+Proxy metrics on the Mixtral-like layout: relative output error (accuracy
+proxy), fraction of expert FLOPs removed (speedup proxy), and memory saved
+(for pruning)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import drop, gating, moe, partition, reconstruct
+from repro.data import pipeline
+from repro.models.layers import split_params
+
+from .common import Row, rel_err, sharp_router_params
+
+
+def ees_keep(r, beta):
+    """EES: skip the 2nd expert of top-2 when s2 < beta * s1."""
+    keep = jnp.ones_like(r.idx, dtype=bool)
+    ratio = r.norm_score[:, 1] / jnp.maximum(r.norm_score[:, 0], 1e-9)
+    return keep.at[:, 1].set(ratio >= beta)
+
+
+def eep_prune(params, usage, r_keep):
+    """EEP: permanently keep the r most-used experts; re-route to them."""
+    order = jnp.argsort(-usage)
+    kept = order[:r_keep]
+    mask = jnp.full((usage.shape[0],), -jnp.inf)
+    mask = mask.at[kept].set(0.0)
+    return kept, mask
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    key = jax.random.PRNGKey(2)
+    cfg = get_config("mixtral-8x7b-lite")
+    params, _ = split_params(moe.make_moe_params(key, cfg))
+    params = sharp_router_params(params)
+    calib = pipeline.calibration_activations(jax.random.fold_in(key, 1),
+                                             512, cfg.d_model)
+    x = pipeline.calibration_activations(jax.random.fold_in(key, 9),
+                                         512, cfg.d_model)
+    y0 = moe.moe_forward_ref(params, x, cfg)
+    r = gating.route(x, params["wg"], cfg.top_k, cfg.router_norm_topk)
+
+    # --- 2T-Drop (ours), partition and reconstruct, ~20% drop ---
+    t1 = float(jnp.quantile(r.norm_score, 0.2))
+    gap = max(min(0.01, t1 * 0.2), 1e-4)
+    p2t = drop.expand_pairs_2t(r.idx, r.combine, r.norm_score, 2,
+                               t1 - gap, t1 + gap)
+    for vname, mdl in [
+            ("2T-Drop(partition)", partition.partial_transform(params, 2)),
+            ("2T-Drop(reconstruct)", reconstruct.partition_and_reconstruct(
+                params, calib, cfg, p=2))]:
+        y = moe.moe_forward_ref(mdl, x, cfg, pairs=p2t)
+        fs = float(drop.flops_saved_fraction(p2t.modes))
+        rows.append((f"table3/{vname}", 0.0,
+                     f"flops_saved={fs:.3f} rel_err={rel_err(y, y0):.4f}"
+                     " mem_saved=0%"))
+
+    # --- EES baseline: beta = median(s2/s1) on calibration ---
+    rc = gating.route(calib, params["wg"], cfg.top_k, cfg.router_norm_topk)
+    beta = float(jnp.median(rc.norm_score[:, 1] /
+                            jnp.maximum(rc.norm_score[:, 0], 1e-9)))
+    keep = ees_keep(r, beta)
+    pairs = drop.SubExpertPairs(idx=r.idx, combine=r.combine, keep=keep,
+                                modes=jnp.where(keep, drop.MODE_FULL,
+                                                drop.MODE_DROP))
+    y = moe.moe_forward_ref(params, x, cfg, pairs=pairs)
+    fs = float(1 - keep.mean())
+    rows.append((f"table3/EES(beta={beta:.2f})", 0.0,
+                 f"flops_saved={fs:.3f} rel_err={rel_err(y, y0):.4f}"
+                 " mem_saved=0%"))
+
+    # --- EEP baseline: prune to r=6 and r=4 of 8 experts ---
+    usage = gating.expert_histogram(rc.idx, cfg.n_experts).astype(jnp.float32)
+    for r_keep in (6, 4):
+        kept, logit_mask = eep_prune(params, usage, r_keep)
+        logits = gating.gate_logits(x, params["wg"]) + logit_mask[None]
+        rr = gating.top_k_routing(logits, cfg.top_k, cfg.router_norm_topk)
+        pairs = drop.SubExpertPairs(
+            idx=rr.idx, combine=rr.combine,
+            keep=jnp.ones_like(rr.idx, dtype=bool),
+            modes=jnp.full_like(rr.idx, drop.MODE_FULL))
+        y = moe.moe_forward_ref(params, x, cfg, pairs=pairs)
+        mem = 1 - r_keep / cfg.n_experts
+        rows.append((f"table3/EEP(r={r_keep})", 0.0,
+                     f"flops_saved=0.000 rel_err={rel_err(y, y0):.4f}"
+                     f" mem_saved={mem:.0%}"))
+    return rows

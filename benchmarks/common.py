@@ -1,0 +1,47 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Row = Tuple[str, float, str]   # (name, us_per_call, derived)
+
+
+def time_fn(fn: Callable, *args, iters: int = 10, warmup: int = 2) -> float:
+    """Median wall-time per call in microseconds (jit-compiled fn)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def rms(x) -> float:
+    return float(jnp.sqrt(jnp.mean(jnp.square(x))))
+
+
+def rel_err(y, y_ref) -> float:
+    return rms(y - y_ref) / max(rms(y_ref), 1e-12)
+
+
+def print_rows(rows: List[Row]):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+def sharp_router_params(params, scale: float = 20.0):
+    """Sharpen a random-init router so normalized gating scores spread like a
+    trained model's (random init is near-uniform; the paper's drop thresholds
+    are meaningless without score spread)."""
+    out = dict(params)
+    out["wg"] = params["wg"] * scale
+    return out

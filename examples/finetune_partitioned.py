@@ -1,0 +1,98 @@
+"""End-to-end training driver (paper §3.1 / Fig 4): fine-tune a ~100M-param
+MoE model for a few hundred steps, original granularity vs complete-
+transformation-partitioned (P=2), and compare loss curves.
+
+    PYTHONPATH=src python examples/finetune_partitioned.py --steps 300
+
+This is the (b)-deliverable end-to-end driver: real data pipeline, AdamW +
+cosine schedule, gradient clipping, checkpointing, loss reporting.
+"""
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint as ckpt
+from repro.configs.base import ModelConfig, DualSparseConfig
+from repro.core import partition
+from repro.data import pipeline
+from repro.models import model as M
+from repro.optim import adamw, cosine_schedule
+
+# ~100M params: 8 layers, d_model 512, 16 experts x d_expert 512 top-2,
+# vocab 16k  ->  emb 2x8.2M + 8 x (attn 1.3M + moe 12.6M) ≈ 128M
+CFG_100M = ModelConfig(
+    arch_id="moe-100m", family="moe", source="examples",
+    n_layers=8, d_model=512, n_heads=8, n_kv_heads=2, d_ff=512,
+    vocab_size=16384, n_experts=16, top_k=2, d_expert=512,
+    dualsparse=DualSparseConfig(enabled=True))
+
+
+def partition_model(params, p):
+    out = dict(params)
+    blocks = dict(params["blocks"])
+    blocks["moe"] = jax.vmap(
+        lambda mp: partition.complete_transform(mp, p))(blocks["moe"])
+    out["blocks"] = blocks
+    return out
+
+
+def train(cfg, params, steps, batch, seq, lr, tag, log_every=20,
+          ckpt_dir=None):
+    opt = adamw(cosine_schedule(lr, steps, warmup=max(steps // 20, 5)))
+    ost = opt.init(params)
+    step_fn = jax.jit(M.make_train_step(cfg, opt, aux_coef=0.01))
+    loader = pipeline.make_loader(cfg, batch, seq)
+    t0 = time.time()
+    losses = []
+    for i in range(steps):
+        params, ost, loss = step_fn(params, ost, loader.get_batch(i))
+        losses.append(float(loss))
+        if (i + 1) % log_every == 0:
+            print(f"[{tag}] step {i+1:4d} loss {losses[-1]:.4f} "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)", flush=True)
+        if ckpt_dir and (i + 1) % 100 == 0:
+            ckpt.save_checkpoint(ckpt_dir, i + 1, {"params": params})
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = CFG_100M
+    print(f"params ~{cfg.n_params()/1e6:.0f}M; {args.steps} steps, "
+          f"batch {args.batch} x seq {args.seq}")
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+
+    # original granularity: top-2 of 16
+    l_orig = train(cfg, params, args.steps, args.batch, args.seq, args.lr,
+                   "orig  top2/16e", ckpt_dir=args.ckpt_dir)
+
+    # complete transformation P=2: top-4 of 32 — same function at init
+    cfg_p = dataclasses.replace(cfg, n_experts=32, top_k=4, d_expert=256)
+    params_p = partition_model(params, 2)
+    l_part = train(cfg_p, params_p, args.steps, args.batch, args.seq,
+                   args.lr, "P=2   top4/32e")
+
+    n = max(args.steps // 10, 1)
+    print("\nfinal-10% mean loss:")
+    print(f"  original    : {sum(l_orig[-n:])/n:.4f}")
+    print(f"  partitioned : {sum(l_part[-n:])/n:.4f}")
+    print("(paper Fig 4: partitioned experts reach lower fine-tuning loss)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Batched serving with the DualSparse-MoE inference system (paper §4-§5.3):
+2000-prompt style throughput run (scaled down for CPU) comparing baseline
+vs 2T-Drop serving.
+
+    PYTHONPATH=src python examples/serve_dualsparse.py --requests 8
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticLM, calibration_activations
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.models.transformer import DistContext
+from repro.serving import GenerationConfig, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmoe-lite")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=50)
+    ap.add_argument("--new-tokens", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    src = SyntheticLM(cfg.vocab_size)
+    prompts = [np.asarray(src.sample_batch(jax.random.fold_in(key, i), 1,
+                                           args.prompt_len)["tokens"][0])
+               for i in range(args.requests)]
+    gen = GenerationConfig(max_new_tokens=args.new_tokens)
+
+    def throughput(engine):
+        t0 = time.time()
+        res = engine.generate(prompts, gen)
+        dt = time.time() - t0
+        return sum(len(r.tokens) for r in res) / dt, res
+
+    base_eng = ServingEngine(cfg, params, batch_size=args.requests,
+                             max_prompt_len=args.prompt_len,
+                             max_new_tokens=args.new_tokens)
+    base_tps, base_res = throughput(base_eng)
+    print(f"baseline        : {base_tps:.1f} tok/s")
+
+    calib = calibration_activations(jax.random.fold_in(key, 7), 512,
+                                    cfg.d_model)
+    tparams = M.transform_params_for_dualsparse(params, cfg, calib)
+    dist = DistContext(mesh=make_host_mesh(1), moe_impl="dispatch",
+                       dualsparse=True)
+    ds_eng = ServingEngine(cfg, tparams, batch_size=args.requests,
+                           max_prompt_len=args.prompt_len,
+                           max_new_tokens=args.new_tokens, dist=dist)
+    ds_tps, ds_res = throughput(ds_eng)
+    print(f"DualSparse 2T   : {ds_tps:.1f} tok/s "
+          f"(T²=({cfg.dualsparse.t_major}, {cfg.dualsparse.t_minor}))")
+
+    agree = np.mean([a.tokens == b.tokens
+                     for a, b in zip(base_res, ds_res)])
+    print(f"greedy outputs identical on {agree:.0%} of requests "
+          "(drop perturbs low-score experts only)")
+
+
+if __name__ == "__main__":
+    main()

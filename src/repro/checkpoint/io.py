@@ -1,0 +1,116 @@
+"""Pytree checkpointing: npz shards + a JSON treedef manifest.
+
+No orbax/flax in the container — this is a small, robust, dependency-free
+equivalent. Arrays are gathered to host; large leaves are sharded across
+multiple npz files (``max_shard_bytes``) so checkpoints of multi-GB models
+stream without a single giant allocation.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
+                    max_shard_bytes: int = 1 << 30) -> str:
+    """Write tree to ``{ckpt_dir}/step_{step}/`` and return that path."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    leaves, _ = _flatten_with_paths(tree)
+    manifest: Dict[str, Any] = {"step": step, "leaves": {}, "shards": []}
+    shard: Dict[str, np.ndarray] = {}
+    shard_bytes = 0
+    shard_id = 0
+
+    def flush():
+        nonlocal shard, shard_bytes, shard_id
+        if not shard:
+            return
+        fn = f"shard_{shard_id:04d}.npz"
+        np.savez(os.path.join(path, fn), **shard)
+        manifest["shards"].append(fn)
+        shard = {}
+        shard_bytes = 0
+        shard_id += 1
+
+    for key, leaf in leaves.items():
+        arr = np.asarray(jax.device_get(leaf))
+        safe = re.sub(r"[^A-Za-z0-9_./\[\]-]", "_", key)
+        manifest["leaves"][key] = {
+            "shard": shard_id, "name": safe,
+            "dtype": str(arr.dtype), "shape": list(arr.shape),
+        }
+        shard[safe] = arr
+        shard_bytes += arr.nbytes
+        if shard_bytes >= max_shard_bytes:
+            flush()
+    flush()
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return path
+
+
+def restore_checkpoint(ckpt_dir: str, target: Any,
+                       step: Optional[int] = None) -> Any:
+    """Restore into the structure of ``target`` (shape/dtype checked)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    shards = [np.load(os.path.join(path, fn), allow_pickle=False)
+              for fn in manifest["shards"]]
+    leaves, treedef = _flatten_with_paths(target)
+    restored = {}
+    for key, spec in manifest["leaves"].items():
+        arr = shards[spec["shard"]][spec["name"]]
+        restored[key] = arr
+    out_leaves = []
+    for key, tgt in leaves.items():
+        if key not in restored:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = restored[key]
+        if list(arr.shape) != list(np.shape(tgt)):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {np.shape(tgt)}")
+        out_leaves.append(arr.astype(tgt.dtype) if hasattr(tgt, "dtype")
+                          else arr)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(target), out_leaves)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None

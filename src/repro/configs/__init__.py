@@ -1,0 +1,52 @@
+"""Config registry: one module per assigned architecture plus the paper's
+own evaluation models (as synthetic-weight layouts)."""
+from __future__ import annotations
+
+from .base import ModelConfig, DualSparseConfig, InputShape, INPUT_SHAPES
+
+from . import zamba2_7b
+from . import granite_20b
+from . import starcoder2_3b
+from . import qwen3_moe_30b_a3b
+from . import qwen2_vl_7b
+from . import mamba2_370m
+from . import dbrx_132b
+from . import whisper_large_v3
+from . import qwen2_7b
+from . import minicpm3_4b
+from . import paper_models
+
+_REGISTRY: dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    if cfg.arch_id in _REGISTRY:
+        raise ValueError(f"duplicate arch id {cfg.arch_id}")
+    _REGISTRY[cfg.arch_id] = cfg
+    return cfg
+
+
+for _mod in (
+    zamba2_7b, granite_20b, starcoder2_3b, qwen3_moe_30b_a3b, qwen2_vl_7b,
+    mamba2_370m, dbrx_132b, whisper_large_v3, qwen2_7b, minicpm3_4b,
+    paper_models,
+):
+    for _cfg in _mod.CONFIGS:
+        register(_cfg)
+
+ASSIGNED_ARCHS = [
+    "zamba2-7b", "granite-20b", "starcoder2-3b", "qwen3-moe-30b-a3b",
+    "qwen2-vl-7b", "mamba2-370m", "dbrx-132b", "whisper-large-v3",
+    "qwen2-7b", "minicpm3-4b",
+]
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    try:
+        return _REGISTRY[arch_id]
+    except KeyError:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_REGISTRY)}")
+
+
+def list_archs() -> list[str]:
+    return sorted(_REGISTRY)

@@ -1,0 +1,11 @@
+"""DualSparse-MoE core: the paper's contribution as composable JAX modules.
+
+- gating       : top-k routing (Eqs. 1-3)
+- partition    : complete / partial expert transformations (§3.1-3.2)
+- reconstruct  : neuron-importance profiling + major/minor reconstruction (§4.2b)
+- drop         : 1T / 2T token-expert computation dropping (§4.1-4.2)
+- load_aware   : load-aware thresholding for EP (§4.3)
+- moe          : MoE layer (reference + capacity dispatch)
+- setp         : Soft Expert-Tensor Parallelism via shard_map (§3.3)
+"""
+from . import gating, partition, reconstruct, drop, load_aware, moe  # noqa: F401

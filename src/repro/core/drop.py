@@ -1,0 +1,131 @@
+"""Token-expert computation dropping (paper §4.1-§4.2).
+
+1T-Drop: drop pairs whose normalized gating score < T¹.
+2T-Drop: with each original expert partitioned+reconstructed into a MAJOR
+and MINOR sub-expert (partial transformation, P=2):
+
+    score <  T²_major                -> drop both halves      (mode 0)
+    T²_major <= score < T²_minor     -> compute major only    (mode 1)
+    score >= T²_minor                -> compute both halves   (mode 2)
+
+Defaults (paper §4.2): T²_major = T¹ - 0.01, T²_minor = T¹ + 0.01.
+All decisions are pure functions of the routing — fixed shapes, jit-safe.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+MODE_DROP, MODE_MAJOR, MODE_FULL = 0, 1, 2
+
+
+def one_t_keep(norm_score, t_drop):
+    """(T,K) bool keep mask. Paper retains scores *exceeding* the threshold."""
+    t_drop = jnp.asarray(t_drop)
+    t = t_drop[..., None] if jnp.ndim(t_drop) >= 1 else t_drop
+    return norm_score > t
+
+
+def two_t_modes(norm_score, t_major, t_minor):
+    """(T,K) int32 modes per original token-expert pair. Thresholds may be
+    scalar, per-token (T,), or per-pair (T,K) — e.g. load-aware."""
+    t_major = jnp.asarray(t_major)
+    t_minor = jnp.asarray(t_minor)
+    if jnp.ndim(t_major) == 1:
+        t_major = t_major[:, None]
+        t_minor = t_minor[:, None]
+    full = norm_score >= t_minor
+    major = norm_score > t_major
+    return jnp.where(full, MODE_FULL, jnp.where(major, MODE_MAJOR, MODE_DROP))
+
+
+class SubExpertPairs(NamedTuple):
+    """Token/sub-expert pair list after partial transformation (Eq. 12)."""
+    idx: jax.Array        # (T, K*P) sub-expert ids
+    combine: jax.Array    # (T, K*P) combine weights (repeated, Eq. 13)
+    keep: jax.Array       # (T, K*P) bool — pair survives the drop
+    modes: jax.Array      # (T, K) original-expert modes (diagnostics)
+
+
+def expand_pairs_2t(idx, combine, norm_score, p: int,
+                    t_major, t_minor) -> SubExpertPairs:
+    """Partial transformation of the routing (Eq. 12) + 2T keep mask.
+
+    Sub-expert p of original expert e has id e*P + p. With reconstruction,
+    sub-expert 0 holds the MAJOR neurons, 1..P-1 the minor ones (P=2 in the
+    paper; we keep P general — minor halves share the minor threshold).
+    """
+    T, K = idx.shape
+    modes = two_t_modes(norm_score, t_major, t_minor)          # (T,K)
+    sub = jnp.arange(p, dtype=idx.dtype)                       # (P,)
+    new_idx = (idx[:, :, None] * p + sub[None, None, :])       # (T,K,P)
+    new_combine = jnp.repeat(combine[:, :, None], p, axis=2)
+    keep_major = modes >= MODE_MAJOR                           # (T,K)
+    keep_minor = modes >= MODE_FULL
+    keep = jnp.where(sub[None, None, :] == 0,
+                     keep_major[:, :, None], keep_minor[:, :, None])
+    return SubExpertPairs(
+        idx=new_idx.reshape(T, K * p),
+        combine=new_combine.reshape(T, K * p),
+        keep=keep.reshape(T, K * p),
+        modes=modes,
+    )
+
+
+def expand_pairs_1t(idx, combine, norm_score, p: int, t_drop) -> SubExpertPairs:
+    """Partial transformation + 1T drop (all-or-nothing per original expert)."""
+    T, K = idx.shape
+    keep1 = one_t_keep(norm_score, t_drop)                     # (T,K)
+    sub = jnp.arange(p, dtype=idx.dtype)
+    new_idx = (idx[:, :, None] * p + sub[None, None, :]).reshape(T, K * p)
+    new_combine = jnp.repeat(combine[:, :, None], p, axis=2).reshape(T, K * p)
+    keep = jnp.repeat(keep1[:, :, None], p, axis=2).reshape(T, K * p)
+    modes = jnp.where(keep1, MODE_FULL, MODE_DROP)
+    return SubExpertPairs(new_idx, new_combine, keep, modes)
+
+
+def drop_rate(pairs: SubExpertPairs) -> jax.Array:
+    """Fraction of token-(sub-)expert computations dropped (paper's metric)."""
+    return 1.0 - jnp.mean(pairs.keep.astype(jnp.float32))
+
+
+def flops_saved_fraction(modes) -> jax.Array:
+    """Fraction of expert FLOPs skipped: mode 0 saves 1, mode 1 saves 1/2."""
+    saved = jnp.where(modes == MODE_DROP, 1.0,
+                      jnp.where(modes == MODE_MAJOR, 0.5, 0.0))
+    return jnp.mean(saved)
+
+
+def threshold_to_drop_rate(norm_scores, thresholds):
+    """Empirical threshold->drop-rate map (paper Fig. 12) from calibration
+    normalized scores (N,K). thresholds: (M,). Returns (M,) drop rates."""
+    flat = norm_scores.reshape(-1)
+    return jax.vmap(lambda t: jnp.mean(flat <= t))(jnp.asarray(thresholds))
+
+
+def calibrate_threshold(norm_scores, target_drop_rate: float):
+    """Inverse of the threshold->drop-rate map: the T¹ achieving a target
+    drop rate on calibration scores (the 'tailored mapping between threshold
+    and drop rate' the paper calls for in §5.3.3)."""
+    flat = jnp.sort(norm_scores.reshape(-1))
+    n = flat.shape[0]
+    idx = jnp.clip(jnp.floor(target_drop_rate * n).astype(jnp.int32),
+                   0, n - 1)
+    return flat[idx]
+
+
+def calibrate_per_layer_thresholds(layer_norm_scores, target_drop_rate: float,
+                                   gap: float = 0.01):
+    """Beyond-paper (the paper's stated future work, §5.3.3): per-layer
+    (T²_major, T²_minor) pairs that equalize each layer's drop rate at the
+    target — Fig 12 shows the same threshold drops 3x more in deep layers
+    than shallow ones, so a global T over-drops exactly where sensitivity is
+    highest.
+
+    layer_norm_scores: list of (N,K) calibration scores, one per layer.
+    Returns (L, 2) array of [t_major, t_minor] rows."""
+    ts = jnp.stack([calibrate_threshold(s, target_drop_rate)
+                    for s in layer_norm_scores])
+    return jnp.stack([jnp.maximum(ts - gap, 0.0), ts + gap], axis=1)

@@ -1,0 +1,56 @@
+"""MoE gating (paper §2.1.1, Eqs. 1-3).
+
+Distinguishes the *combine weight* (what multiplies each expert output —
+renormalized top-k for Qwen3/Mixtral-style routers, raw softmax score for
+DeepSeek-style) from the *normalized gating score* used by the DualSparse
+drop decision (paper §4.1 always normalizes over the selected top-k).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Routing(NamedTuple):
+    """Top-k routing decision for a flat batch of T tokens."""
+    idx: jax.Array          # (T, K) int32 — selected expert ids
+    combine: jax.Array      # (T, K) f32 — weight applied to expert outputs
+    norm_score: jax.Array   # (T, K) f32 — normalized score for drop decisions
+    probs: jax.Array        # (T, E) f32 — full softmax (for aux losses/tests)
+
+
+def gate_logits(x, wg):
+    """x: (T, d), wg: (d, E) -> (T, E) f32 logits (Eq. 5)."""
+    return (x.astype(jnp.float32) @ wg.astype(jnp.float32))
+
+
+def top_k_routing(logits, k: int, renorm: bool) -> Routing:
+    probs = jax.nn.softmax(logits, axis=-1)                  # (T, E) Eq. 6
+    vals, idx = jax.lax.top_k(probs, k)                       # (T, K)
+    denom = jnp.sum(vals, axis=-1, keepdims=True)
+    norm_score = vals / jnp.maximum(denom, 1e-20)             # §4.1 normalize
+    combine = norm_score if renorm else vals
+    return Routing(idx=idx, combine=combine, norm_score=norm_score, probs=probs)
+
+
+def route(x, wg, k: int, renorm: bool) -> Routing:
+    return top_k_routing(gate_logits(x, wg), k, renorm)
+
+
+def load_balance_aux_loss(probs, idx, n_experts: int):
+    """Switch-style auxiliary load-balance loss for training runs."""
+    T = probs.shape[0]
+    me = jnp.mean(probs, axis=0)                              # (E,)
+    onehot = jax.nn.one_hot(idx, n_experts).sum(axis=1)       # (T, E)
+    ce = jnp.mean(onehot, axis=0)
+    return n_experts * jnp.sum(me * ce)
+
+
+def expert_histogram(idx, n_experts: int, keep=None):
+    """Token count per expert; ``keep`` optionally masks dropped pairs."""
+    onehot = jax.nn.one_hot(idx, n_experts, dtype=jnp.int32)  # (T,K,E)
+    if keep is not None:
+        onehot = onehot * keep[..., None].astype(jnp.int32)
+    return onehot.sum(axis=(0, 1))

@@ -1,0 +1,53 @@
+"""Load-aware thresholding in Expert Parallelism (paper §4.3).
+
+The MoE step is blocked by the most-loaded EP device, so a uniform drop
+threshold wastes accuracy on lightly-loaded devices. The paper's step-down
+rule: compute each device's load ratio r_d = actual / ideal; devices with
+r_d >= 1 use the maximum threshold T_max, devices with r_d < 1 reduce the
+threshold proportionally to the deviation from 1.
+
+Everything here is pure JAX so it runs inside the shard_map EP body with a
+single psum of the (E,) routing histogram as the only communication.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def device_loads(hist, experts_per_device: int):
+    """hist: (E,) global token counts per expert -> (D,) per-device loads,
+    with experts laid out contiguously across EP devices."""
+    E = hist.shape[0]
+    D = E // experts_per_device
+    return hist.reshape(D, experts_per_device).sum(axis=1)
+
+
+def step_down_thresholds(loads, t_max: float):
+    """Paper §4.3 rule. loads: (D,) -> per-device thresholds (D,)."""
+    ideal = jnp.mean(loads.astype(jnp.float32))
+    ratio = loads.astype(jnp.float32) / jnp.maximum(ideal, 1e-9)
+    return jnp.where(ratio >= 1.0, t_max, t_max * ratio)
+
+
+def pair_thresholds(idx, loads, experts_per_device: int, t_max: float,
+                    t_gap: float = 0.01):
+    """Per-(token,expert)-pair 2T thresholds from the target device's load.
+
+    idx: (T, K) *original* expert ids. Returns (t_major, t_minor) each (T, K).
+    The ±t_gap split mirrors T²_major = T¹ - 0.01 / T²_minor = T¹ + 0.01.
+    """
+    t_dev = step_down_thresholds(loads, t_max)                 # (D,)
+    dev_of_pair = idx // experts_per_device                    # (T, K)
+    t1 = t_dev[dev_of_pair]
+    return jnp.maximum(t1 - t_gap, 0.0), t1 + t_gap
+
+
+def makespan(loads):
+    """EP step time proxy == max device load (paper: 'blocked by the device
+    with the heaviest computational load')."""
+    return jnp.max(loads)
+
+
+def post_drop_loads(hist_kept, experts_per_device: int):
+    return device_loads(hist_kept, experts_per_device)

@@ -1,0 +1,202 @@
+"""MoE layer: params, exact dense reference, and the capacity-based
+gather/scatter dispatch path used inside jit/shard_map.
+
+Three forward paths, all fixed-shape / jit-safe:
+
+  * ``moe_forward_ref``       — computes every expert for every token and
+    combines with (possibly dropped) weights. Exact oracle, O(T·E) compute.
+  * ``moe_forward_dispatch``  — sort-free capacity dispatch: scatter tokens
+    into an (E, C, d) buffer, batched expert GEMMs, scatter back. This is
+    the per-device body of S-ETP and the host of the Pallas kernel.
+  * shard_map S-ETP lives in ``core.setp``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.layers import Param, normal
+from . import gating
+from .drop import (SubExpertPairs, expand_pairs_1t, expand_pairs_2t,
+                   MODE_DROP, MODE_FULL, MODE_MAJOR)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def make_moe_params(key, cfg, d_expert: Optional[int] = None,
+                    n_experts: Optional[int] = None):
+    """Param tree (wrapped in Param leaves with logical axes)."""
+    d = cfg.d_model
+    E = n_experts if n_experts is not None else cfg.n_experts
+    f = d_expert if d_expert is not None else cfg.d_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "wg": normal(ks[0], (d, E), ("embed", None)),
+        "w1": normal(ks[1], (E, d, f), ("expert", "embed", "expert_ffn")),
+        "w3": normal(ks[2], (E, d, f), ("expert", "embed", "expert_ffn")),
+        "w2": normal(ks[3], (E, f, d), ("expert", "expert_ffn", "embed")),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * f
+        km = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w1": normal(km[0], (d, fs), ("embed", "ffn")),
+            "w3": normal(km[1], (d, fs), ("embed", "ffn")),
+            "w2": normal(km[2], (fs, d), ("ffn", "embed")),
+        }
+    return p
+
+
+def expert_ffn(w1, w3, w2, x):
+    """Batched SwiGLU over experts: x (E, C, d) -> (E, C, d)."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, w1))
+    h = h * jnp.einsum("ecd,edf->ecf", x, w3)
+    return jnp.einsum("ecf,efd->ecd", h, w2)
+
+
+def _shared_out(params, x):
+    if "shared" not in params:
+        return 0.0
+    s = params["shared"]
+    h = jax.nn.silu(x @ s["w1"]) * (x @ s["w3"])
+    return h @ s["w2"]
+
+
+# ---------------------------------------------------------------------------
+# Routing helpers
+# ---------------------------------------------------------------------------
+
+def route_dualsparse(params, x, cfg, *, thresholds=None) -> SubExpertPairs:
+    """Routing incl. partial-transformation expansion and 2T-Drop keep mask.
+
+    ``thresholds``: optional (t_major, t_minor) override — each entry may be
+    scalar or per-token (T,) for load-aware thresholding.
+    Requires params already partial-transformed with cfg.dualsparse.partition_p.
+    """
+    ds = cfg.dualsparse
+    r = gating.route(x, params["wg"], cfg.top_k, cfg.router_norm_topk)
+    if thresholds is not None:
+        t_major, t_minor = thresholds
+    elif "thresholds" in params:
+        # per-layer calibrated thresholds (beyond-paper, §5.3.3 future work);
+        # stored in the param tree so layer scans slice them automatically
+        t_major, t_minor = params["thresholds"][0], params["thresholds"][1]
+    else:
+        t_major, t_minor = ds.t_major, ds.t_minor
+    return expand_pairs_2t(r.idx, r.combine, r.norm_score,
+                           ds.partition_p, t_major, t_minor)
+
+
+def aux_loss_for(params, x, cfg):
+    """Switch-style load-balance auxiliary loss for this MoE layer."""
+    r = gating.route(x, params["wg"], cfg.top_k, cfg.router_norm_topk)
+    E = params["wg"].shape[1]
+    return gating.load_balance_aux_loss(r.probs, r.idx, E)
+
+
+def route_plain(params, x, cfg, n_experts=None) -> SubExpertPairs:
+    """Routing with no partition/drop (P=1, keep everything)."""
+    E = n_experts if n_experts is not None else params["wg"].shape[1]
+    k = cfg.top_k if E == cfg.n_experts else cfg.top_k * (E // cfg.n_experts)
+    r = gating.route(x, params["wg"], k, cfg.router_norm_topk)
+    return SubExpertPairs(idx=r.idx, combine=r.combine,
+                          keep=jnp.ones_like(r.idx, dtype=bool),
+                          modes=jnp.full_like(r.idx, MODE_FULL))
+
+
+# ---------------------------------------------------------------------------
+# Reference forward (exact, dense over experts)
+# ---------------------------------------------------------------------------
+
+def moe_forward_ref(params, x, cfg, pairs: Optional[SubExpertPairs] = None,
+                    major_only_minor_zero: bool = False):
+    """Dense oracle: every expert computed for every token.
+
+    x: (T, d). If ``pairs`` is given, combine weights/keep masks come from it
+    (sub-expert ids index params' expert axis). ``major_only_minor_zero`` is
+    unused here (modes are already expressed in pairs.keep over sub-experts).
+    """
+    E = params["w1"].shape[0]
+    if pairs is None:
+        pairs = route_plain(params, x, cfg, n_experts=E)
+    # all-expert outputs: (E, T, d)
+    h = jax.nn.silu(jnp.einsum("td,edf->etf", x, params["w1"]))
+    h = h * jnp.einsum("td,edf->etf", x, params["w3"])
+    outs = jnp.einsum("etf,efd->etd", h, params["w2"])
+    w = pairs.combine * pairs.keep.astype(pairs.combine.dtype)   # (T, K')
+    sel = jax.nn.one_hot(pairs.idx, E, dtype=w.dtype) * w[..., None]
+    y = jnp.einsum("tke,etd->td", sel, outs).astype(x.dtype)
+    return y + _shared_out(params, x)
+
+
+# ---------------------------------------------------------------------------
+# Capacity-based dispatch forward (production per-device path)
+# ---------------------------------------------------------------------------
+
+def capacity_for(n_tokens: int, k_eff: int, n_experts: int,
+                 capacity_factor: float = 1.25, multiple: int = 8) -> int:
+    cap = int(capacity_factor * n_tokens * k_eff / n_experts)
+    return max(multiple, (cap + multiple - 1) // multiple * multiple)
+
+
+def dispatch_indices(pairs: SubExpertPairs, n_experts: int, capacity: int):
+    """Compute per-pair (expert, slot) coordinates. Dropped pairs and
+    over-capacity pairs get slot == capacity (out of range, discarded)."""
+    T, K = pairs.idx.shape
+    flat_e = pairs.idx.reshape(-1)
+    flat_keep = pairs.keep.reshape(-1)
+    onehot = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)
+    onehot = onehot * flat_keep[:, None].astype(jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - onehot                  # (T*K, E)
+    slot = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    slot = jnp.where(flat_keep, slot, capacity)
+    slot = jnp.minimum(slot, capacity)                          # overflow drops
+    return flat_e, slot
+
+
+def moe_forward_dispatch(params, x, cfg, pairs: Optional[SubExpertPairs] = None,
+                         capacity_factor: float = 1.25,
+                         capacity: Optional[int] = None,
+                         use_kernel: bool = False):
+    """Scatter -> batched expert GEMM -> gather. Exact w.r.t. the reference
+    whenever no token exceeds capacity.
+
+    With ``use_kernel`` the batched GEMM is the Pallas dualsparse kernel
+    (block-skips minor halves); otherwise a jnp einsum computes full experts
+    (minor-half skipping then only reduces *dispatched* pairs, which is how
+    2T-Drop still yields proportional savings on this path: the minor
+    sub-expert of a mode-1 token is simply never dispatched).
+    """
+    T, d = x.shape
+    E = params["w1"].shape[0]
+    if pairs is None:
+        pairs = route_plain(params, x, cfg, n_experts=E)
+    K = pairs.idx.shape[1]
+    if capacity is None:
+        capacity = capacity_for(T, K, E, capacity_factor)
+    flat_e, slot = dispatch_indices(pairs, E, capacity)
+
+    buf = jnp.zeros((E, capacity + 1, d), x.dtype)
+    buf = buf.at[flat_e, slot].set(jnp.repeat(x, K, axis=0))
+    buf = buf[:, :capacity]
+
+    if use_kernel:
+        from ..kernels import ops as kops
+        counts = gating.expert_histogram(pairs.idx, E, keep=pairs.keep)
+        out_buf = kops.grouped_swiglu(buf, params["w1"], params["w3"],
+                                      params["w2"],
+                                      counts_full=jnp.minimum(counts, capacity))
+    else:
+        out_buf = expert_ffn(params["w1"], params["w3"], params["w2"], buf)
+
+    out_buf = jnp.pad(out_buf, ((0, 0), (0, 1), (0, 0)))
+    gathered = out_buf[flat_e, slot]                            # (T*K, d)
+    w = (pairs.combine * pairs.keep.astype(pairs.combine.dtype)).reshape(-1)
+    y = (gathered * w[:, None].astype(gathered.dtype))
+    y = y.reshape(T, K, d).sum(axis=1)
+    return y.astype(x.dtype) + _shared_out(params, x)

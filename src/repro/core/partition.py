@@ -1,0 +1,80 @@
+"""Expert partition: complete and partial transformations (paper §3).
+
+Both transformations are mathematically exact restructurings of a pre-trained
+MoE layer; the tests in tests/test_partition.py assert allclose equivalence
+(paper Eqs. 11 and 13).
+
+Params layout (see core.moe.make_moe_params):
+    wg: (d, E)   w1, w3: (E, d, f)   w2: (E, f, d)
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _partition_expert_weights(w1, w3, w2, p: int):
+    """Evenly split each expert's neurons into p contiguous sub-experts.
+
+    (E, d, f) -> (E*p, d, f/p); (E, f, d) -> (E*p, f/p, d).
+    Sub-expert e*p + j holds neuron slice [j*f/p, (j+1)*f/p) of expert e.
+    """
+    E, d, f = w1.shape
+    assert f % p == 0, f"d_expert {f} not divisible by partition factor {p}"
+    fp = f // p
+    w1p = w1.reshape(E, d, p, fp).transpose(0, 2, 1, 3).reshape(E * p, d, fp)
+    w3p = w3.reshape(E, d, p, fp).transpose(0, 2, 1, 3).reshape(E * p, d, fp)
+    w2p = w2.reshape(E, p, fp, d).reshape(E * p, fp, d)
+    return w1p, w3p, w2p
+
+
+def complete_transform(params: Dict, p: int) -> Dict:
+    """Complete transformation (§3.1): the result is a *standard* MoE layer
+    with E*p experts and Top-(K*p) selection that computes the identical
+    function: gating rows repeated p times (Eq. 7), neurons partitioned,
+    down-projection W2 scaled by p (Eq. 11 scaling choice (2))."""
+    wg = params["wg"]
+    d, E = wg.shape
+    wg_p = jnp.repeat(wg, p, axis=1)                        # (d, E*p), Eq. 7
+    w1p, w3p, w2p = _partition_expert_weights(
+        params["w1"], params["w3"], params["w2"], p)
+    out = dict(params)
+    out.update({"wg": wg_p, "w1": w1p, "w3": w3p, "w2": w2p * p})
+    return out
+
+
+def partial_transform(params: Dict, p: int) -> Dict:
+    """Partial transformation (§3.2): gating network untouched; only expert
+    weights are split. Score repetition / index remapping (Eq. 12) happens at
+    routing time — see core.drop.expand_pairs_*. No W2 scaling (Eq. 13)."""
+    w1p, w3p, w2p = _partition_expert_weights(
+        params["w1"], params["w3"], params["w2"], p)
+    out = dict(params)
+    out.update({"w1": w1p, "w3": w3p, "w2": w2p})
+    return out
+
+
+def invert_partial(params: Dict, p: int) -> Dict:
+    """Reverse of partial_transform (the paper notes partial transformation
+    is reversible since the gating network is preserved)."""
+    w1, w3, w2 = params["w1"], params["w3"], params["w2"]
+    Ep, d, fp = w1.shape
+    E = Ep // p
+    w1o = w1.reshape(E, p, d, fp).transpose(0, 2, 1, 3).reshape(E, d, p * fp)
+    w3o = w3.reshape(E, p, d, fp).transpose(0, 2, 1, 3).reshape(E, d, p * fp)
+    w2o = w2.reshape(E, p, fp, d).reshape(E, p * fp, d)
+    out = dict(params)
+    out.update({"w1": w1o, "w3": w3o, "w2": w2o})
+    return out
+
+
+def dense_ffn_partition(w1, w3, w2, p: int):
+    """Beyond-paper: exact partition of a *dense* SwiGLU FFN into p uniform
+    sub-FFNs (gate == 1 each), enabling S-ETP-style all-to-all sharding for
+    the dense/hybrid assigned architectures. sum_j f_j(x) == f(x)."""
+    w1 = w1[None]
+    w3 = w3[None]
+    w2 = w2[None]
+    return _partition_expert_weights(w1, w3, w2, p)

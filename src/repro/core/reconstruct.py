@@ -1,0 +1,69 @@
+"""Static expert reconstruction (paper §4.2(b)).
+
+Neuron-importance profiling on calibration samples (four metrics,
+Eqs. 14-17), then a per-expert neuron permutation that sorts neurons by
+importance so that after partial transformation with P=2 sub-expert
+``2e`` holds the MAJOR (important) half and ``2e+1`` the MINOR half.
+
+Reordering neurons of a SwiGLU expert is an exact transformation:
+permuting columns of W1/W3 together with rows of W2 leaves f(x) unchanged.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import gating
+
+IMPORTANCE_METHODS = ("gate", "abs_gate", "gate_up", "abs_gate_up")
+
+
+def neuron_importance(params: Dict, x, cfg, method: str = "abs_gate",
+                      routed_only: bool = True):
+    """Accumulated neuron importance per (expert, neuron).
+
+    x: (T, d) calibration activations entering the MoE layer.
+    Eq. 14 gate: Σ Swish(x·W1)        Eq. 15 abs_gate: Σ |Swish(x·W1)|
+    Eq. 16 gate_up: Σ Swish(x·W1)⊙(x·W3)   Eq. 17 abs_gate_up: Σ |...|
+
+    ``routed_only`` accumulates only over tokens actually routed to the
+    expert (matching the paper's inference-time profiling).
+    """
+    if method not in IMPORTANCE_METHODS:
+        raise ValueError(f"unknown importance method {method}")
+    E = params["w1"].shape[0]
+    g = jax.nn.silu(jnp.einsum("td,edf->etf", x, params["w1"]))   # (E,T,f)
+    if method in ("gate_up", "abs_gate_up"):
+        up = jnp.einsum("td,edf->etf", x, params["w3"])
+        g = g * up
+    if method.startswith("abs"):
+        g = jnp.abs(g)
+    if routed_only:
+        r = gating.route(x, params["wg"], cfg.top_k, cfg.router_norm_topk)
+        sel = jax.nn.one_hot(r.idx, E).sum(axis=1).T               # (E,T)
+        g = g * sel[:, :, None]
+    return g.sum(axis=1)                                           # (E, f)
+
+
+def reorder_neurons(params: Dict, importance) -> Dict:
+    """Permute each expert's neurons so importance is descending (exact)."""
+    order = jnp.argsort(-importance, axis=-1)                      # (E, f)
+    w1 = jnp.take_along_axis(params["w1"], order[:, None, :], axis=2)
+    w3 = jnp.take_along_axis(params["w3"], order[:, None, :], axis=2)
+    w2 = jnp.take_along_axis(params["w2"], order[:, :, None], axis=1)
+    out = dict(params)
+    out.update({"w1": w1, "w3": w3, "w2": w2})
+    return out
+
+
+def partition_and_reconstruct(params: Dict, x, cfg, p: int = 2,
+                              method: str = "abs_gate") -> Dict:
+    """The paper's unified process (§4.2(b)): profile all neurons of each
+    original expert, reorder by importance, then partial-transform so the
+    major sub-expert is ``e*p`` and minor sub-experts are ``e*p+1..``."""
+    from . import partition as part
+    imp = neuron_importance(params, x, cfg, method)
+    reordered = reorder_neurons(params, imp)
+    return part.partial_transform(reordered, p)

@@ -1,0 +1,298 @@
+"""Soft Expert-Tensor Parallelism (paper §3.3) and the ETP baseline.
+
+S-ETP = partial transformation + plain EP. Each original expert is split into
+P sub-experts; sub-experts are placed *strided* across the EP axis
+(sub-expert ``id`` lives on device ``id % D``), so the P halves of one expert
+sit on different devices — the tensor-parallel memory/compute split — while
+the communication pattern stays a single AlltoAll each way (Fig. 5b).
+
+The ETP baseline (Fig. 5a) shards whole experts over an ``ep`` sub-axis and
+each expert's d_ff over a ``tp`` sub-axis, paying AlltoAll+AllGather on
+dispatch and ReduceScatter+AlltoAll on return.
+
+Both are shard_map bodies in plain JAX (jax.lax collectives). Load-aware
+thresholding (§4.3) costs one psum of a (D,) histogram.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+from . import gating, moe as moe_mod
+from .drop import MODE_DROP, MODE_FULL, MODE_MAJOR, SubExpertPairs, drop_rate
+from .load_aware import step_down_thresholds
+
+
+# ---------------------------------------------------------------------------
+# Placement
+# ---------------------------------------------------------------------------
+
+def to_strided_order(w, n_dev: int):
+    """Reorder the leading (sub-)expert axis from id-order to placement order
+    so that a contiguous shard_map shard holds device d's sub-experts.
+
+    id = loc * D + d  ->  placed[d * L + loc] = w[id]."""
+    Ep = w.shape[0]
+    L = Ep // n_dev
+    return w.reshape(L, n_dev, *w.shape[1:]).swapaxes(0, 1).reshape(w.shape)
+
+
+def place_params_strided(params: Dict, n_dev: int) -> Dict:
+    out = dict(params)
+    for k in ("w1", "w3", "w2"):
+        out[k] = to_strided_order(params[k], n_dev)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# S-ETP shard_map body
+# ---------------------------------------------------------------------------
+
+def _ceil_mult(x: float, m: int = 8) -> int:
+    return max(m, int(np.ceil(x / m) * m)) if m > 1 else max(1, int(np.ceil(x)))
+
+
+def _setp_body(wg, w1, w3, w2, x_loc, *, cfg, n_dev: int, axis: str,
+               token_axes: tuple, dualsparse: bool, load_aware: bool,
+               cap_factor: float, local_cap_factor: float, use_kernel: bool,
+               drop_mode: str, cap_multiple: int = 8,
+               wire_dtype=jnp.bfloat16):
+    """Per-device S-ETP MoE. x_loc: (B_l, S_l, d). Experts already
+    partial-transformed (E*P sub-experts) and strided-placed; this device
+    holds w1/w3/w2 slices of L = E*P/D sub-experts."""
+    ds = cfg.dualsparse
+    p_factor = ds.partition_p if dualsparse else 1
+    Bl, Sl, d = x_loc.shape
+    xt = x_loc.reshape(-1, d)
+    T = xt.shape[0]
+    L = w1.shape[0]                              # local sub-experts
+    # whole-body compute dtype == wire dtype: keeps the AlltoAll in bf16
+    # (a convert adjacent to the collective gets hoisted across it by the
+    # algebraic simplifier, silently doubling interconnect bytes)
+    w1 = w1.astype(wire_dtype)
+    w3 = w3.astype(wire_dtype)
+    w2 = w2.astype(wire_dtype)
+
+    r = gating.route(xt, wg, cfg.top_k, cfg.router_norm_topk)
+    K = cfg.top_k
+
+    # --- partial transformation of the routing (Eq. 12) + 2T keep mask ---
+    sub = jnp.arange(p_factor, dtype=r.idx.dtype)
+    sub_idx = (r.idx[:, :, None] * p_factor + sub).reshape(T, K * p_factor)
+    combine = jnp.repeat(r.combine[:, :, None], p_factor, axis=2)
+    combine = combine.reshape(T, K * p_factor)
+    dev_of = sub_idx % n_dev
+    loc_of = sub_idx // n_dev
+    score = jnp.repeat(r.norm_score[:, :, None], p_factor, axis=2)
+    score = score.reshape(T, K * p_factor)
+    is_major = (sub_idx % p_factor) == 0 if p_factor > 1 else \
+        jnp.ones_like(sub_idx, dtype=bool)
+
+    if dualsparse:
+        if load_aware:
+            # pre-drop load histogram per EP device — one psum
+            hist = jax.nn.one_hot(dev_of, n_dev, dtype=jnp.float32).sum((0, 1))
+            for ax in token_axes + (axis,):
+                hist = jax.lax.psum(hist, ax)
+            t1 = step_down_thresholds(hist, ds.t_max)[dev_of]   # (T, K*P)
+            gap = (ds.t_minor - ds.t_major) / 2
+            t_major, t_minor = t1 - gap, t1 + gap
+        else:
+            t_major = jnp.full_like(score, ds.t_major)
+            t_minor = jnp.full_like(score, ds.t_minor)
+        if drop_mode == "1t":
+            keep = score > (t_major + t_minor) / 2
+        else:  # 2t
+            keep = jnp.where(is_major, score > t_major, score >= t_minor)
+    else:
+        keep = jnp.ones_like(sub_idx, dtype=bool)
+
+    Kp = K * p_factor
+    cap = _ceil_mult(cap_factor * T * Kp / n_dev, cap_multiple)
+
+    # --- dispatch: slot per pair within its destination device ---
+    flat_dev = dev_of.reshape(-1)
+    flat_keep = keep.reshape(-1)
+    onehot = jax.nn.one_hot(flat_dev, n_dev, dtype=jnp.int32)
+    onehot = onehot * flat_keep[:, None].astype(jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - onehot
+    slot = jnp.take_along_axis(pos, flat_dev[:, None], axis=1)[:, 0]
+    slot = jnp.where(flat_keep, jnp.minimum(slot, cap), cap)
+
+    x_rep = jnp.repeat(xt, Kp, axis=0)
+    # bf16 on the wire: halves AlltoAll traffic; experts compute from bf16
+    # activations (standard practice) while the combine stays in x dtype.
+    send_x = jnp.zeros((n_dev, cap + 1, d), wire_dtype)
+    send_x = send_x.at[flat_dev, slot].set(x_rep.astype(wire_dtype))[:, :cap]
+    send_e = jnp.full((n_dev, cap + 1), -1, jnp.int32)
+    send_e = send_e.at[flat_dev, slot].set(loc_of.reshape(-1))[:, :cap]
+
+    # --- the S-ETP collective: ONE AlltoAll each way (Fig. 5b) ---
+    recv_x = jax.lax.all_to_all(send_x, axis, 0, 0, tiled=False)
+    recv_e = jax.lax.all_to_all(send_e, axis, 0, 0, tiled=False)
+
+    # --- local grouped expert FFN ---
+    rx = recv_x.reshape(n_dev * cap, d)
+    re = recv_e.reshape(-1)
+    valid = re >= 0
+    c2 = _ceil_mult(local_cap_factor * n_dev * cap / L, cap_multiple)
+    oh2 = jax.nn.one_hot(jnp.where(valid, re, 0), L, dtype=jnp.int32)
+    oh2 = oh2 * valid[:, None].astype(jnp.int32)
+    pos2 = jnp.cumsum(oh2, axis=0) - oh2
+    slot2 = jnp.take_along_axis(pos2, jnp.maximum(re, 0)[:, None], axis=1)[:, 0]
+    slot2 = jnp.where(valid, jnp.minimum(slot2, c2), c2)
+    buf = jnp.zeros((L, c2 + 1, d), rx.dtype).at[jnp.maximum(re, 0), slot2].set(rx)
+    buf = buf[:, :c2]
+    if use_kernel:
+        from ..kernels import ops as kops
+        counts = (oh2.sum(axis=0)).astype(jnp.int32)       # kept rows / expert
+        out_buf = kops.grouped_swiglu(buf, w1, w3, w2,
+                                      counts_full=jnp.minimum(counts, c2))
+    else:
+        out_buf = moe_mod.expert_ffn(w1, w3, w2, buf)
+    out_buf = jnp.pad(out_buf, ((0, 0), (0, 1), (0, 0)))
+    out_tok = out_buf[jnp.maximum(re, 0), slot2].astype(wire_dtype)
+    out_tok = out_tok * valid[:, None].astype(out_tok.dtype)
+
+    # --- return AlltoAll + combine on the source device ---
+    back = jax.lax.all_to_all(out_tok.reshape(n_dev, cap, d), axis, 0, 0)
+    back = jnp.pad(back, ((0, 0), (0, 1), (0, 0)))
+    out_pair = back[flat_dev, slot]                              # (T*Kp, d)
+    w = (combine.reshape(-1) * flat_keep.astype(combine.dtype))
+    y = (out_pair * w[:, None].astype(out_pair.dtype)).reshape(T, Kp, d).sum(1)
+    return y.reshape(Bl, Sl, d).astype(x_loc.dtype)
+
+
+def setp_moe_forward(params: Dict, x, cfg, mesh: Mesh, *,
+                     expert_axis: str = "model",
+                     dualsparse: bool = False, load_aware: bool = False,
+                     cap_factor: float = 1.15, local_cap_factor: float = 1.25,
+                     use_kernel: bool = False, drop_mode: str = "2t",
+                     cap_multiple: int = 8, wire_dtype=jnp.bfloat16,
+                     x_spec: Optional[P] = None):
+    """S-ETP MoE layer. params' experts must already be partial-transformed
+    (and reconstructed, if dualsparse) AND strided-placed via
+    ``place_params_strided(params, mesh.shape[expert_axis])``.
+
+    x: (B, S, d) — batch sharded over (pod, data), seq sharded over
+    ``expert_axis`` so the AlltoAll happens within each data-parallel group.
+    """
+    n_dev = mesh.shape[expert_axis]
+    token_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    if x_spec is None:
+        from ..distributed.sharding import batch_spec
+        # shard seq over the expert axis when divisible (prefill/train);
+        # decode steps (S == 1) keep seq replicated.
+        seq_ax = expert_axis if x.shape[1] % n_dev == 0 else None
+        x_spec = batch_spec(x.shape[0], mesh, extra=(seq_ax, None))
+    pspec = {
+        "wg": P(),
+        "w1": P(expert_axis), "w3": P(expert_axis), "w2": P(expert_axis),
+    }
+    if "shared" in params:
+        pspec["shared"] = {"w1": P(), "w3": P(), "w2": P()}
+    body = functools.partial(
+        _setp_body, cfg=cfg, n_dev=n_dev, axis=expert_axis,
+        token_axes=token_axes, dualsparse=dualsparse, load_aware=load_aware,
+        cap_factor=cap_factor, local_cap_factor=local_cap_factor,
+        use_kernel=use_kernel, drop_mode=drop_mode, cap_multiple=cap_multiple,
+        wire_dtype=wire_dtype)
+
+    def fn(wg, w1, w3, w2, xx):
+        return body(wg, w1, w3, w2, xx)
+
+    y = shard_map(
+        fn, mesh=mesh,
+        in_specs=(pspec["wg"], pspec["w1"], pspec["w3"], pspec["w2"], x_spec),
+        out_specs=x_spec, check_vma=False,
+    )(params["wg"], params["w1"], params["w3"], params["w2"], x)
+    if "shared" in params:
+        s = params["shared"]
+        h = jax.nn.silu(x @ s["w1"]) * (x @ s["w3"])
+        y = y + h @ s["w2"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# ETP baseline (Fig. 5a): EP over `ep` axis, TP over `tp` axis
+# ---------------------------------------------------------------------------
+
+def _etp_body(wg, w1, w3, w2, x_loc, *, cfg, n_ep: int, n_tp: int,
+              cap_factor: float, local_cap_factor: float):
+    """w1/w3: (E_loc, d, f/tp); w2: (E_loc, f/tp, d). Tokens sharded over ep
+    (and replicated over tp). Pattern: AlltoAll(ep) + AllGather(tp) dispatch,
+    partial FFN, ReduceScatter(tp) + AlltoAll(ep) return."""
+    Bl, Sl, d = x_loc.shape
+    xt = x_loc.reshape(-1, d)
+    T = xt.shape[0]
+    L = w1.shape[0]
+    r = gating.route(xt, wg, cfg.top_k, cfg.router_norm_topk)
+    K = cfg.top_k
+    dev_of = r.idx // L
+    loc_of = r.idx % L
+    cap = _ceil_mult(cap_factor * T * K / n_ep)
+    flat_dev = dev_of.reshape(-1)
+    onehot = jax.nn.one_hot(flat_dev, n_ep, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - onehot
+    slot = jnp.take_along_axis(pos, flat_dev[:, None], axis=1)[:, 0]
+    slot = jnp.minimum(slot, cap)
+    x_rep = jnp.repeat(xt, K, axis=0)
+    send_x = jnp.zeros((n_ep, cap + 1, d), xt.dtype).at[flat_dev, slot].set(x_rep)[:, :cap]
+    send_e = jnp.full((n_ep, cap + 1), -1, jnp.int32).at[flat_dev, slot].set(
+        loc_of.reshape(-1))[:, :cap]
+
+    # dispatch: AlltoAll over ep ...
+    recv_x = jax.lax.all_to_all(send_x, "ep", 0, 0)
+    recv_e = jax.lax.all_to_all(send_e, "ep", 0, 0)
+    # ... + AllGather over tp (each tp rank computed routing for its own
+    # token shard; expert compute needs the full token set of the ep group)
+    recv_x = jax.lax.all_gather(recv_x, "tp", tiled=False)      # (tp, nev, cap, d)
+    recv_e = jax.lax.all_gather(recv_e, "tp", tiled=False)
+    rx = recv_x.reshape(-1, d)
+    re = recv_e.reshape(-1)
+    valid = re >= 0
+    n_recv = rx.shape[0]
+    c2 = _ceil_mult(local_cap_factor * n_recv / L)
+    oh2 = jax.nn.one_hot(jnp.where(valid, re, 0), L, dtype=jnp.int32)
+    oh2 = oh2 * valid[:, None].astype(jnp.int32)
+    pos2 = jnp.cumsum(oh2, axis=0) - oh2
+    slot2 = jnp.take_along_axis(pos2, jnp.maximum(re, 0)[:, None], axis=1)[:, 0]
+    slot2 = jnp.where(valid, jnp.minimum(slot2, c2), c2)
+    buf = jnp.zeros((L, c2 + 1, d), rx.dtype).at[jnp.maximum(re, 0), slot2].set(rx)[:, :c2]
+    out_buf = moe_mod.expert_ffn(w1, w3, w2, buf)     # partial over f/tp
+    out_buf = jnp.pad(out_buf, ((0, 0), (0, 1), (0, 0)))
+    out_tok = out_buf[jnp.maximum(re, 0), slot2] * valid[:, None].astype(rx.dtype)
+    out_tok = out_tok.reshape(n_tp, n_ep, cap, d)
+    # return: ReduceScatter over tp (sum partial FFN outputs, keep own shard)
+    out_own = jax.lax.psum_scatter(out_tok, "tp", scatter_dimension=0,
+                                   tiled=False)                  # (nev, cap, d)
+    back = jax.lax.all_to_all(out_own, "ep", 0, 0)
+    back = jnp.pad(back, ((0, 0), (0, 1), (0, 0)))
+    out_pair = back[flat_dev, slot]
+    w = r.combine.reshape(-1)
+    y = (out_pair * w[:, None].astype(out_pair.dtype)).reshape(T, K, d).sum(1)
+    return y.reshape(Bl, Sl, d).astype(x_loc.dtype)
+
+
+def etp_moe_forward(params: Dict, x, cfg, mesh: Mesh, *,
+                    ep_axis: str = "ep", tp_axis: str = "tp",
+                    cap_factor: float = 1.3, local_cap_factor: float = 2.0):
+    """ETP baseline. Expert weights sharded (expert over ep, d_expert over tp);
+    tokens sharded over ep, replicated over tp."""
+    n_ep, n_tp = mesh.shape[ep_axis], mesh.shape[tp_axis]
+    body = functools.partial(_etp_body, cfg=cfg, n_ep=n_ep, n_tp=n_tp,
+                             cap_factor=cap_factor,
+                             local_cap_factor=local_cap_factor)
+    x_spec = P(ep_axis, None, None)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(ep_axis, None, tp_axis), P(ep_axis, None, tp_axis),
+                  P(ep_axis, tp_axis, None), x_spec),
+        out_specs=x_spec, check_vma=False,
+    )(params["wg"], params["w1"], params["w3"], params["w2"], x)

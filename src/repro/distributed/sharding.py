@@ -1,0 +1,93 @@
+"""Logical-axis sharding rules -> PartitionSpecs.
+
+Every param tree is accompanied by a structurally identical tree of logical
+axis-name tuples (see models.layers). This module maps those names onto mesh
+axes, dropping any assignment that does not divide the dimension (e.g. MQA's
+single KV head on a 16-way model axis -> replicated).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> candidate mesh axes, in priority order.
+# "pod" extends the data axis; the model axis hosts TP *and* EP.
+RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": (),
+    "window": ("data",),        # sharded KV window for context-parallel decode
+    "vocab": ("model",),
+    "embed": (),
+    "ffn": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "q_per_kv": (),
+    "head_dim": (),
+    "expert": ("model",),       # EP: experts live on the model axis
+    "expert_ffn": (),
+    "ssm_inner": ("model",),
+    "ssm_heads": ("model",),
+    "state": (),
+    "layers": (),
+    None: (),
+}
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 0
+
+
+def spec_for(axes: Sequence[Optional[str]], shape: Sequence[int],
+             mesh: Mesh, rules=None) -> P:
+    """PartitionSpec for one array: per dimension, use the rule's mesh axes
+    (possibly a tuple) if their product divides the dim size, else trim."""
+    rules = rules or RULES
+    out = []
+    used: set = set()
+    for ax_name, dim in zip(axes, shape):
+        cands = rules.get(ax_name, ())
+        picked = []
+        prod = 1
+        for m in cands:
+            msz = _axis_size(mesh, m)
+            if msz == 0 or m in used:
+                continue
+            if dim % (prod * msz) == 0:
+                picked.append(m)
+                prod *= msz
+        for m in picked:
+            used.add(m)
+        out.append(tuple(picked) if len(picked) > 1 else (picked[0] if picked else None))
+    return P(*out)
+
+
+def tree_shardings(axes_tree, shape_tree, mesh: Mesh, rules=None):
+    """NamedSharding tree matching a params tree.
+
+    axes_tree: tree of tuples; shape_tree: matching tree of arrays or
+    ShapeDtypeStructs."""
+    def one(axes, arr):
+        return NamedSharding(mesh, spec_for(axes, arr.shape, mesh, rules))
+    return jax.tree.map(one, axes_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def batch_spec(batch_size: int, mesh: Mesh, extra=()) -> P:
+    """Shard batch over (pod, data) prefix that divides it."""
+    picked = []
+    prod = 1
+    for m in ("pod", "data"):
+        msz = _axis_size(mesh, m)
+        if msz and batch_size % (prod * msz) == 0:
+            picked.append(m)
+            prod *= msz
+    lead = tuple(picked) if len(picked) > 1 else (picked[0] if picked else None)
+    return P(lead, *extra)
+
+
+def count_mesh_devices(mesh: Mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

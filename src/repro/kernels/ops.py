@@ -1,0 +1,33 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels run in ``interpret=True`` (the kernel body
+executes in Python, validating block logic exactly); on a real TPU backend
+they lower natively.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .dualsparse_ffn import grouped_swiglu_pallas
+from . import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f"))
+def grouped_swiglu(x, w1, w3, w2, counts_full=None, counts_major=None,
+                   block_c: int = 128, block_f: int = 128):
+    """Grouped SwiGLU expert FFN (optionally with 2T-Drop counts).
+
+    x: (E, C, d) -> (E, C, d). See kernels.ref for exact semantics."""
+    return grouped_swiglu_pallas(
+        x, w1, w3, w2, counts_full, counts_major,
+        block_c=block_c, block_f=block_f, interpret=not _on_tpu())
+
+
+grouped_swiglu_ref = ref.grouped_swiglu_ref

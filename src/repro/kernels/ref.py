@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grouped_swiglu_ref(x, w1, w3, w2, counts_full=None, counts_major=None):
+    """Grouped SwiGLU expert FFN with 2T-Drop row/neuron masking.
+
+    x: (E, C, d) per-expert token buffers (rows beyond the valid count are
+    padding). w1, w3: (E, d, f); w2: (E, f, d). Neuron layout after
+    reconstruction: [0, f/2) = MAJOR neurons, [f/2, f) = MINOR.
+
+    Row semantics (tokens sorted by mode within each expert buffer):
+      rows [0, counts_full[e])                       -> full expert
+      rows [counts_full[e], counts_full+counts_major) -> major half only
+      remaining rows                                  -> padding (zero out)
+
+    counts_full=None means all C rows are valid full-mode tokens.
+    """
+    E, C, d = x.shape
+    f = w1.shape[-1]
+    rows = jnp.arange(C)[None, :]                       # (1, C)
+    if counts_full is None:
+        counts_full = jnp.full((E,), C, jnp.int32)
+        counts_major = jnp.zeros((E,), jnp.int32)
+    if counts_major is None:
+        counts_major = jnp.zeros((E,), jnp.int32)
+    full_ok = rows < counts_full[:, None]               # (E, C)
+    any_ok = rows < (counts_full + counts_major)[:, None]
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, w1))
+    h = h * jnp.einsum("ecd,edf->ecf", x, w3)
+    neuron_is_major = (jnp.arange(f) < f // 2)[None, None, :]
+    row_mask = jnp.where(neuron_is_major, any_ok[..., None],
+                         full_ok[..., None])
+    h = h * row_mask.astype(h.dtype)
+    return jnp.einsum("ecf,efd->ecd", h, w2)

@@ -1,0 +1,120 @@
+"""Abstract input construction (ShapeDtypeStruct) + shardings for dry-runs.
+
+input_specs() mirrors models.model.make_batch / init_cache but produces
+weak-type-correct ShapeDtypeStructs — nothing is ever allocated.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, InputShape
+from ..distributed.sharding import batch_spec, spec_for, tree_shardings
+from ..models import model as M
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def decode_window(cfg: ModelConfig, shape: InputShape) -> int:
+    """Sliding window used for the long-context decode variant (DESIGN §5)."""
+    if shape.name == "long_500k" and cfg.sliding_window:
+        return cfg.sliding_window
+    return 0
+
+
+def abstract_batch(cfg: ModelConfig, batch: int, seq: int, kind: str,
+                   compute_dtype=jnp.bfloat16) -> Dict[str, Any]:
+    out: Dict[str, Any] = {"tokens": sds((batch, seq), jnp.int32)}
+    if kind == "train":
+        out["targets"] = sds((batch, seq), jnp.int32)
+    if cfg.frontend == "vision":
+        out["frontend"] = sds((batch, cfg.n_frontend_tokens, cfg.d_model),
+                              compute_dtype)
+    if cfg.frontend == "audio":
+        out["audio_embeds"] = sds((batch, cfg.n_frontend_tokens, cfg.d_model),
+                                  compute_dtype)
+    return out
+
+
+def batch_shardings(cfg: ModelConfig, batch_abs, mesh: Mesh):
+    def one(path, leaf):
+        extra = (None,) * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, batch_spec(leaf.shape[0], mesh, extra))
+    return jax.tree_util.tree_map_with_path(one, batch_abs)
+
+
+# ---------------------------------------------------------------------------
+# Cache shardings (decode)
+# ---------------------------------------------------------------------------
+
+def _window_axes(w: int, batch_sharded: bool, want_model: bool,
+                 data_n: int, model_n: int):
+    """Mesh axes for the KV window dim: 'data' when the batch can't use it,
+    'model' (context-parallel) when heads can't; only while divisible."""
+    axes = []
+    prod = 1
+    if not batch_sharded and w % (prod * data_n) == 0:
+        axes.append("data")
+        prod *= data_n
+    if want_model and w % (prod * model_n) == 0:
+        axes.append("model")
+        prod *= model_n
+    return tuple(axes) if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def cache_shardings(cfg: ModelConfig, cache_abs, mesh: Mesh):
+    """Sharding specs for the layer-stacked decode cache.
+
+    Layout rules:
+      * batch dim -> (pod, data) when divisible
+      * heads / latent feature dims -> model when divisible
+      * when batch cannot shard over data (long_500k B=1), the KV *window*
+        dim shards over data instead — context-parallel decode.
+    """
+    model_n = mesh.shape.get("model", 1)
+    data_n = mesh.shape.get("data", 1)
+
+    def one(path, leaf):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        shp = leaf.shape
+        if name == "pos" or len(shp) == 0:
+            return NamedSharding(mesh, P())
+        bspec = batch_spec(shp[1], mesh) if len(shp) >= 2 else P(None)
+        b_axes = bspec[0] if len(bspec) else None
+        batch_sharded = b_axes is not None
+        if name in ("k", "v") and len(shp) == 5:        # (L,B,W,H,D)
+            h_ax = "model" if shp[3] % model_n == 0 else None
+            w_ax = _window_axes(shp[2], batch_sharded, h_ax is None,
+                                data_n, model_n)
+            return NamedSharding(mesh, P(None, b_axes, w_ax, h_ax, None))
+        if name in ("c", "kr") and len(shp) == 4:       # (L,B,W,r) MLA
+            w_ax = _window_axes(shp[2], batch_sharded, True, data_n, model_n)
+            return NamedSharding(mesh, P(None, b_axes, w_ax, None))
+        if name in ("cross_k", "cross_v") and len(shp) == 5:
+            h_ax = "model" if shp[3] % model_n == 0 else None
+            return NamedSharding(mesh, P(None, b_axes, None, h_ax, None))
+        if name == "ssm" and len(shp) == 5:             # (L,B,H,P,N)
+            h_ax = "model" if shp[2] % model_n == 0 else None
+            return NamedSharding(mesh, P(None, b_axes, h_ax, None, None))
+        if name == "conv" and len(shp) == 4:            # (L,B,w,C)
+            c_ax = "model" if shp[3] % model_n == 0 else None
+            return NamedSharding(mesh, P(None, b_axes, None, c_ax))
+        # fallback: replicate
+        return NamedSharding(mesh, P(*([None] * len(shp))))
+
+    return jax.tree_util.tree_map_with_path(one, cache_abs)
+
+
+def param_shardings(cfg: ModelConfig, params_abs, axes_tree, mesh: Mesh):
+    def one(axes, leaf):
+        return NamedSharding(mesh, spec_for(axes, leaf.shape, mesh))
+    return jax.tree.map(one, axes_tree, params_abs,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))

@@ -1,0 +1,81 @@
+"""Training driver.
+
+Examples:
+  # CPU-runnable ~100M-param fine-tune (reduced arch, synthetic data):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-moe-30b-a3b \
+      --reduced --steps 200 --batch 8 --seq 128
+
+  # production lowering check (no execution):
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-moe-30b-a3b \
+      --shape train_4k
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED_ARCHS, get_config, list_archs
+from repro.data import pipeline
+from repro.models import model as M
+from repro.optim import adamw, cosine_schedule
+from repro import checkpoint as ckpt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-moe-30b-a3b", choices=list_archs())
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--aux-coef", type=float, default=0.01,
+                    help="MoE load-balance aux loss coefficient")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    print(f"arch={cfg.arch_id} family={cfg.family} "
+          f"params~{cfg.n_params()/1e6:.1f}M reduced={args.reduced}")
+
+    key = jax.random.PRNGKey(args.seed)
+    params = M.init_params(key, cfg)
+    opt = adamw(cosine_schedule(args.lr, args.steps, warmup=args.steps // 20))
+    opt_state = opt.init(params)
+    loader = pipeline.make_loader(cfg, args.batch, args.seq, seed=args.seed)
+    step_fn = jax.jit(M.make_train_step(
+        cfg, opt, aux_coef=args.aux_coef if cfg.is_moe else 0.0))
+
+    start = 0
+    if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
+        start = ckpt.latest_step(args.ckpt_dir)
+        state = ckpt.restore_checkpoint(
+            args.ckpt_dir, {"params": params, "opt": opt_state})
+        params, opt_state = state["params"], state["opt"]
+        print(f"restored step {start}")
+
+    t0 = time.time()
+    for i in range(start, args.steps):
+        batch = loader.get_batch(i)
+        params, opt_state, loss = step_fn(params, opt_state, batch)
+        if (i + 1) % args.log_every == 0 or i == start:
+            dt = time.time() - t0
+            print(f"step {i+1:5d}  loss {float(loss):.4f}  "
+                  f"({dt / max(i + 1 - start, 1):.2f}s/step)", flush=True)
+        if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+            ckpt.save_checkpoint(args.ckpt_dir, i + 1,
+                                 {"params": params, "opt": opt_state})
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+# Model substrate package. Submodules imported lazily to keep import costs
+# low and avoid cycles; use `from repro.models import transformer` etc.

@@ -1,0 +1,437 @@
+"""Attention substrate: blockwise (flash-style) attention in pure JAX,
+GQA/MQA, MLA (latent attention) with absorbed decode, KV caches including
+a ring-buffer sliding-window cache for sub-quadratic long-context decode.
+
+No (S,S) score matrix is ever materialized for long sequences — the
+blockwise path keeps activations at O(S * block) via an online-softmax scan,
+which is the TPU-friendly structure (each block pair is an MXU matmul).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers
+from .layers import Param, normal, zeros, ones
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Blockwise attention (flash-style, pure JAX)
+# ---------------------------------------------------------------------------
+
+def blockwise_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                        q_offset=0, kv_valid_len=None,
+                        q_block: int = 512, kv_block: int = 1024,
+                        shard_blocks=None):
+    """Online-softmax blockwise attention.
+
+    q: (B, Sq, Hkv, G, D)   — query heads grouped under their KV head
+    k, v: (B, Skv, Hkv, D)
+    q_offset: absolute position of q[0] (int or traced scalar) for causal
+      masking during decode/prefill continuation.
+    window: if >0, query i attends keys j with i-window < j <= i.
+    kv_valid_len: if given (scalar), keys >= this index are masked out.
+    shard_blocks: optional fn(x, n_lead_batchlike) applying a sharding
+      constraint with the q-block dim mapped to the model axis — context
+      parallelism: each model shard owns a band of query blocks and scans
+      the full KV (GQA models whose few KV heads cannot split over a large
+      TP axis would otherwise leave it idle and invite bad propagation).
+    Returns (B, Sq, Hkv, G, D).
+    """
+    B, Sq, H, G, D = q.shape
+    Skv = k.shape[1]
+    orig_sq = Sq
+    qb = min(q_block, Sq)
+    kb = min(kv_block, Skv)
+    # pad to block multiples
+    pq = (-Sq) % qb
+    pk = (-Skv) % kb
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0), (0, 0)))
+        Sq += pq
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        if kv_valid_len is None:
+            kv_valid_len = Skv
+        Skv += pk
+    nq, nk = Sq // qb, Skv // kb
+    scale = 1.0 / np.sqrt(D)
+
+    q = q.reshape(B, nq, qb, H, G, D)
+    k = k.reshape(B, nk, kb, H, D)
+    v = v.reshape(B, nk, kb, H, D)
+    if shard_blocks is not None:
+        q = shard_blocks(q)
+        k = shard_blocks(k, model_dim=None)
+        v = shard_blocks(v, model_dim=None)
+
+    q_pos = q_offset + jnp.arange(Sq).reshape(nq, qb)          # (nq, qb)
+    k_pos = jnp.arange(Skv).reshape(nk, kb)                     # (nk, kb)
+
+    def per_q_block(q_blk, q_pos_blk):
+        # q_blk: (B, qb, H, G, D); scan over kv blocks
+        def step(carry, inp):
+            m, l, o = carry
+            k_blk, v_blk, k_pos_blk = inp
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((qb, kb), dtype=bool)
+            if causal:
+                mask &= q_pos_blk[:, None] >= k_pos_blk[None, :]
+            if window:
+                mask &= q_pos_blk[:, None] - k_pos_blk[None, :] < window
+            if kv_valid_len is not None:
+                mask &= (k_pos_blk < kv_valid_len)[None, :]
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bqhgk,bkhd->bqhgd", p.astype(v_blk.dtype), v_blk,
+                            preferred_element_type=jnp.float32)
+            o_new = o * corr[..., None] + pv
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, qb, H, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, qb, H, G), jnp.float32)
+        o0 = jnp.zeros((B, qb, H, G, D), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(
+            step, (m0, l0, o0),
+            (jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0), k_pos))
+        return o / jnp.maximum(l[..., None], 1e-30)
+
+    out = jax.vmap(per_q_block, in_axes=(1, 0), out_axes=1)(q, q_pos)
+    if shard_blocks is not None:
+        out = shard_blocks(out)
+    out = out.reshape(B, Sq, H, G, D)[:, :orig_sq]
+    return out.astype(v.dtype)
+
+
+def plain_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    kv_valid_len=None):
+    """Reference O(S^2)-memory attention, used for short sequences/tests."""
+    B, Sq, H, G, D = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", q, k,
+                   preferred_element_type=jnp.float32) / np.sqrt(D)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    if kv_valid_len is not None:
+        mask &= (k_pos < kv_valid_len)[None, :]
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bqhgk,bkhd->bqhgd", p, v)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention module
+# ---------------------------------------------------------------------------
+
+def make_gqa_params(key, cfg):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": normal(ks[0], (d, hkv, hq // hkv, hd), ("embed", "kv_heads", "q_per_kv", "head_dim")),
+        "wk": normal(ks[1], (d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": normal(ks[2], (d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": normal(ks[3], (hkv, hq // hkv, hd, d), ("kv_heads", "q_per_kv", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros((hkv, hq // hkv, hd), ("kv_heads", "q_per_kv", "head_dim"))
+        p["bk"] = zeros((hkv, hd), ("kv_heads", "head_dim"))
+        p["bv"] = zeros((hkv, hd), ("kv_heads", "head_dim"))
+    return p
+
+
+def gqa_project_qkv(params, x, positions, cfg):
+    """x: (B,S,d) -> q (B,S,Hkv,G,D), k/v (B,S,Hkv,D), with RoPE applied."""
+    q = jnp.einsum("bsd,dhgk->bshgk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    B, S, Hkv, G, D = q.shape
+    sect = tuple(cfg.mrope_sections)
+    q = layers.apply_rope(q.reshape(B, S, Hkv * G, D), positions,
+                          cfg.rope_theta, sect).reshape(B, S, Hkv, G, D)
+    k = layers.apply_rope(k, positions, cfg.rope_theta, sect)
+    return q, k, v
+
+
+def make_shard_blocks(dist, seq_len: int, q_block: int = 512):
+    """Context-parallel constraint for blockwise attention: pick a q_block so
+    the q-block dim tiles the model axis, and return (shard_fn, q_block)."""
+    if dist is None:
+        return None, q_block
+    model_n = dist.mesh.shape.get("model", 1)
+    if model_n > 1 and seq_len % model_n == 0 and seq_len // model_n >= 128:
+        q_block = seq_len // model_n
+    from ..distributed.sharding import batch_spec
+
+    def fn(x, model_dim=1):
+        extra = [None] * (x.ndim - 1)
+        if model_dim is not None and x.shape[model_dim] % model_n == 0:
+            extra[model_dim - 1] = "model"
+        return dist.constrain(x, batch_spec(x.shape[0], dist.mesh,
+                                            tuple(extra)))
+
+    return fn, q_block
+
+
+def gqa_attention(params, x, positions, cfg, *, causal=True, window=0,
+                  use_blockwise=None, dist=None):
+    q, k, v = gqa_project_qkv(params, x, positions, cfg)
+    S = x.shape[1]
+    if use_blockwise is None:
+        use_blockwise = S > 1024
+    if use_blockwise:
+        shard_blocks, qb = make_shard_blocks(dist, S)
+        o = blockwise_attention(q, k, v, causal=causal, window=window,
+                                q_block=qb, shard_blocks=shard_blocks)
+    else:
+        o = plain_attention(q, k, v, causal=causal, window=window)
+    return jnp.einsum("bshgk,hgkd->bsd", o, params["wo"])
+
+
+def build_cache_from_seq(k, v, cap: int, window: int = 0,
+                         dtype=jnp.bfloat16):
+    """Turn full-sequence K/V (B,S,H,D) into a decode cache of capacity
+    ``cap`` (ring layout when windowed, matching kv_cache_insert)."""
+    B, S, H, D = k.shape
+    if window > 0:
+        w = min(cap, S)
+        slots = (S - w + jnp.arange(w)) % cap
+        kc = jnp.zeros((B, cap, H, D), dtype).at[:, slots].set(
+            k[:, S - w:].astype(dtype))
+        vc = jnp.zeros((B, cap, H, D), dtype).at[:, slots].set(
+            v[:, S - w:].astype(dtype))
+    else:
+        assert cap >= S, f"cache capacity {cap} < prefill length {S}"
+        kc = jnp.zeros((B, cap, H, D), dtype).at[:, :S].set(k.astype(dtype))
+        vc = jnp.zeros((B, cap, H, D), dtype).at[:, :S].set(v.astype(dtype))
+    return {"k": kc, "v": vc}
+
+
+def gqa_prefill_attention(params, x, positions, cfg, *, window=0, cap=None,
+                          cache_dtype=jnp.bfloat16, dist=None):
+    """Full-sequence attention that also returns the populated KV cache."""
+    q, k, v = gqa_project_qkv(params, x, positions, cfg)
+    S = x.shape[1]
+    if S > 1024:
+        shard_blocks, qb = make_shard_blocks(dist, S)
+        o = blockwise_attention(q, k, v, causal=True, window=window,
+                                q_block=qb, shard_blocks=shard_blocks)
+    else:
+        o = plain_attention(q, k, v, causal=True, window=window)
+    out = jnp.einsum("bshgk,hgkd->bsd", o, params["wo"])
+    cache = build_cache_from_seq(k, v, cap if cap else S, window, cache_dtype)
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# KV cache (full and sliding-window ring buffer)
+#
+# Caches are plain arrays so they stack/scan over layers cleanly; the
+# absolute position `pos` is carried once at the model level and the window
+# size is a static argument.
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, length: int, n_kv: int, head_dim: int,
+                  dtype=jnp.bfloat16):
+    """Returns {"k": (B, W, Hkv, D), "v": ...}. ``length`` is the window size
+    for windowed decode or the full context length otherwise."""
+    return {"k": jnp.zeros((batch, length, n_kv, head_dim), dtype),
+            "v": jnp.zeros((batch, length, n_kv, head_dim), dtype)}
+
+
+def _cache_slot(pos, capacity: int, window: int):
+    return pos % capacity if window > 0 else pos
+
+
+def _cache_validity(pos_after, capacity: int, window: int):
+    """Validity mask + absolute positions of cache slots after inserting the
+    token at position pos_after-1 (ring buffer when windowed)."""
+    slots = jnp.arange(capacity)
+    if window > 0:
+        abs_pos = pos_after - 1 - ((pos_after - 1 - slots) % capacity)
+        valid = (abs_pos >= 0) & (abs_pos > pos_after - 1 - window)
+    else:
+        abs_pos = slots
+        valid = slots < pos_after
+    return valid, abs_pos
+
+
+def kv_cache_insert(cache, k_new, v_new, pos, window: int = 0):
+    """Insert one step (B,1,Hkv,D) at absolute position pos."""
+    cap = cache["k"].shape[1]
+    idx = _cache_slot(pos, cap, window)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, idx, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, idx, 0, 0))
+    return {"k": k, "v": v}
+
+
+def gqa_decode_attention(params, x, cache, pos, cfg, window: int = 0):
+    """One-token decode: x (B,1,d) against the cache at absolute position
+    ``pos`` (scalar). Returns (out, new_cache)."""
+    B = x.shape[0]
+    posb = jnp.full((B, 1), pos, jnp.int32)
+    if cfg.mrope_sections:
+        posb = jnp.broadcast_to(posb[None], (3,) + posb.shape)
+    q, k_new, v_new = gqa_project_qkv(params, x, posb, cfg)
+    cache = kv_cache_insert(cache, k_new, v_new, pos, window)
+    valid, _ = _cache_validity(pos + 1, cache["k"].shape[1], window)
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    s = jnp.einsum("bqhgk,bthk->bqhgt", q, cache["k"],
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(cache["v"].dtype)
+    o = jnp.einsum("bqhgt,bthk->bqhgk", p, cache["v"])
+    return jnp.einsum("bshgk,hgkd->bsd", o, params["wo"]), cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention; MiniCPM3 / DeepSeek-V2 style)
+# ---------------------------------------------------------------------------
+
+def make_mla_params(key, cfg):
+    d = cfg.d_model
+    H = cfg.n_heads
+    rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "wq_a": normal(ks[0], (d, rq), ("embed", None)),
+        "q_norm": ones((rq,), (None,)),
+        "wq_b": normal(ks[1], (rq, H, dn + dr), (None, "heads", "head_dim")),
+        "wkv_a": normal(ks[2], (d, rkv + dr), ("embed", None)),
+        "kv_norm": ones((rkv,), (None,)),
+        "wk_b": normal(ks[3], (rkv, H, dn), (None, "heads", "head_dim")),
+        "wv_b": normal(ks[4], (rkv, H, dv), (None, "heads", "head_dim")),
+        "wo": normal(ks[5], (H, dv, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def mla_project_latent(params, x, cfg):
+    """Compressed KV latent: returns (c_kv (B,S,rkv), k_rope (B,S,dr))."""
+    rkv = cfg.kv_lora_rank
+    kv_a = x @ params["wkv_a"]
+    c_kv = layers.rms_norm(kv_a[..., :rkv], params["kv_norm"], cfg.norm_eps)
+    k_rope = kv_a[..., rkv:]
+    return c_kv, k_rope
+
+
+def mla_queries(params, x, positions, cfg):
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q_lat = layers.rms_norm(x @ params["wq_a"], params["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, params["wq_b"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_attention(params, x, positions, cfg, *, causal=True, window=0,
+                  dist=None):
+    """Prefill/train path: decompress per-head K/V, blockwise attention."""
+    B, S, _ = x.shape
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q_nope, q_rope = mla_queries(params, x, positions, cfg)
+    c_kv, k_rope = mla_project_latent(params, x, cfg)
+    k_rope = layers.apply_rope(k_rope[..., None, :], positions,
+                               cfg.rope_theta)[..., 0, :]
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["wk_b"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, params["wv_b"])
+    H = cfg.n_heads
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)[:, :, :, None, :]
+    q = jnp.moveaxis(q, 2, 2)  # (B,S,H,1,dn+dr)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))], axis=-1)
+    # pad v to qk dim for the shared kernel, slice after
+    dv = v.shape[-1]
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv)))
+    if S > 1024:
+        shard_blocks, qb = make_shard_blocks(dist, S)
+        o = blockwise_attention(q, k, v_pad, causal=causal, window=window,
+                                q_block=qb, shard_blocks=shard_blocks)
+    else:
+        o = plain_attention(q, k, v_pad, causal=causal, window=window)
+    o = o[..., 0, :dv]
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+
+
+def init_mla_cache(batch, length, cfg, dtype=jnp.bfloat16):
+    return {"c": jnp.zeros((batch, length, cfg.kv_lora_rank), dtype),
+            "kr": jnp.zeros((batch, length, cfg.qk_rope_head_dim), dtype)}
+
+
+def mla_prefill_attention(params, x, positions, cfg, *, window=0, cap=None,
+                          cache_dtype=jnp.bfloat16, dist=None):
+    """MLA prefill that also returns the populated latent cache."""
+    out = mla_attention(params, x, positions, cfg, window=window, dist=dist)
+    c_kv, k_rope = mla_project_latent(params, x, cfg)
+    k_rope = layers.apply_rope(k_rope[..., None, :], positions,
+                               cfg.rope_theta)[..., 0, :]
+    S = x.shape[1]
+    cap = cap if cap else S
+
+    def ring(a):                                          # (B,S,F) -> (B,cap,F)
+        B, _, F = a.shape
+        if window > 0:
+            w = min(cap, S)
+            slots = (S - w + jnp.arange(w)) % cap
+            return jnp.zeros((B, cap, F), cache_dtype).at[:, slots].set(
+                a[:, S - w:].astype(cache_dtype))
+        return jnp.zeros((B, cap, F), cache_dtype).at[:, :S].set(
+            a.astype(cache_dtype))
+
+    return out, {"c": ring(c_kv), "kr": ring(k_rope)}
+
+
+def mla_decode_attention(params, x, cache, pos, cfg, window: int = 0):
+    """Absorbed one-token decode against the compressed latent cache.
+
+    q_nope is absorbed through wk_b into latent space so attention scores are
+    computed directly against c_kv (rank-space) — the TPU-efficient MLA decode.
+    """
+    B = x.shape[0]
+    posb = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope = mla_queries(params, x, posb, cfg)       # (B,1,H,dn/dr)
+    c_new, kr_new = mla_project_latent(params, x, cfg)       # (B,1,rkv/dr)
+    kr_new = layers.apply_rope(kr_new[..., None, :], posb,
+                               cfg.rope_theta)[..., 0, :]
+    cap = cache["c"].shape[1]
+    idx = _cache_slot(pos, cap, window)
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c"], c_new.astype(cache["c"].dtype), (0, idx, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["kr"], kr_new.astype(cache["kr"].dtype), (0, idx, 0))
+    cache = {"c": c_kv, "kr": k_rope}
+    valid, _ = _cache_validity(pos + 1, cap, window)
+    # absorb: q_eff (B,1,H,rkv)
+    q_eff = jnp.einsum("bshk,rhk->bshr", q_nope, params["wk_b"])
+    scale = 1.0 / np.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    s = (jnp.einsum("bshr,btr->bsht", q_eff, c_kv,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bshk,btk->bsht", q_rope, k_rope,
+                      preferred_element_type=jnp.float32)) * scale
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(c_kv.dtype)
+    o_lat = jnp.einsum("bsht,btr->bshr", p, c_kv)            # (B,1,H,rkv)
+    o = jnp.einsum("bshr,rhk->bshk", o_lat, params["wv_b"])  # (B,1,H,dv)
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"]), cache

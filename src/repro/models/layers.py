@@ -1,0 +1,180 @@
+"""Shared neural-net building blocks and the tiny param system.
+
+Params are plain pytrees (nested dicts of jnp arrays). Alongside each params
+tree we build a *structurally identical* tree of logical-axis tuples (strings)
+used by ``repro.distributed.sharding`` to derive PartitionSpecs. The two trees
+are built in one pass via ``Param`` leaves and split with ``split_params``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Param system
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Param:
+    """A leaf holding both the value and its logical sharding axes."""
+    value: Any                   # jnp array (or ShapeDtypeStruct under eval_shape)
+    axes: Tuple[Optional[str], ...]
+
+
+jax.tree_util.register_pytree_node(
+    Param,
+    lambda p: ((p.value,), p.axes),
+    lambda axes, vals: Param(vals[0], axes),
+)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_params(tree):
+    """(params_tree, axes_tree) from a tree with Param leaves."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    return values, axes
+
+
+def normal(key, shape, axes, scale=0.02, dtype=jnp.float32) -> Param:
+    return Param((scale * jax.random.normal(key, shape)).astype(dtype), axes)
+
+
+def zeros(shape, axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.zeros(shape, dtype), axes)
+
+
+def ones(shape, axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.ones(shape, dtype), axes)
+
+
+def stack_layer_params(key, n_layers: int, build_fn) -> Any:
+    """vmap a per-layer param builder over a leading 'layers' axis (for scan)."""
+    keys = jax.random.split(key, n_layers)
+    stacked = jax.vmap(build_fn)(keys)
+    # prepend the (unsharded) layers axis to every leaf's logical axes
+    return jax.tree.map(
+        lambda p: Param(p.value, ("layers",) + tuple(p.axes)),
+        stacked, is_leaf=is_param)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 1e4,
+               mrope_sections: Sequence[int] = ()):
+    """Rotate-half rotary embedding.
+
+    x: (..., S, H, D). positions: (B, S) int32 — or (3, B, S) for M-RoPE,
+    in which case ``mrope_sections`` (summing to D//2) selects which position
+    stream each frequency index uses (Qwen2-VL §2).
+    """
+    d = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(d, theta))                 # (D/2,)
+    if mrope_sections:
+        assert positions.ndim == 3, "M-RoPE needs (3,B,S) positions"
+        # angle per stream: (3, B, S, D/2)
+        ang3 = positions[..., None].astype(jnp.float32) * inv
+        sec_ids = np.repeat(np.arange(len(mrope_sections)),
+                            list(mrope_sections))            # (D/2,) in [0,3)
+        sel = jnp.asarray(sec_ids[None, :] ==
+                          np.arange(len(mrope_sections))[:, None],
+                          dtype=jnp.float32)                 # (3, D/2)
+        ang = jnp.einsum("kbsd,kd->bsd", ang3, sel)
+    else:
+        ang = positions[..., None].astype(jnp.float32) * inv  # (B, S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                           # (B,S,1,D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu(x, w1, w3, w2):
+    """SwiGLU FFN (paper Eq. 4): (Swish(x·W1) ⊙ (x·W3)) · W2."""
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def gelu_mlp(x, w_in, w_out):
+    return jax.nn.gelu(x @ w_in, approximate=True) @ w_out
+
+
+def make_mlp_params(key, d_model: int, d_ff: int, kind: str):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "w1": normal(k1, (d_model, d_ff), ("embed", "ffn")),
+            "w3": normal(k2, (d_model, d_ff), ("embed", "ffn")),
+            "w2": normal(k3, (d_ff, d_model), ("ffn", "embed"), scale=0.02),
+        }
+    return {
+        "w_in": normal(k1, (d_model, d_ff), ("embed", "ffn")),
+        "w_out": normal(k2, (d_ff, d_model), ("ffn", "embed")),
+    }
+
+
+def apply_mlp(params, x, kind: str):
+    if kind == "swiglu":
+        return swiglu(x, params["w1"], params["w3"], params["w2"])
+    return gelu_mlp(x, params["w_in"], params["w_out"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def make_embed_params(key, vocab: int, d_model: int, tie: bool):
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": normal(k1, (vocab, d_model), ("vocab", "embed"))}
+    if not tie:
+        p["lm_head"] = normal(k2, (d_model, vocab), ("embed", "vocab"))
+    return p
+
+
+def embed(params, tokens):
+    return params["embedding"][tokens]
+
+
+def unembed(params, x):
+    if "lm_head" in params:
+        return x @ params["lm_head"]
+    return x @ params["embedding"].T

@@ -1,0 +1,292 @@
+"""Mamba2 / SSD (state-space duality) layer [arXiv:2405.21060].
+
+TPU adaptation: the sequence dimension is processed in the *chunked matmul
+form* of SSD — intra-chunk terms are batched (Q×Q) matmuls that map onto the
+MXU, and the inter-chunk state recurrence is a ``jax.lax.associative_scan``
+over chunks (log-depth, collective-free). No sequential per-token scan is
+ever lowered for training/prefill; decode is the O(1) state update.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers
+from .layers import Param, normal, zeros, ones
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def make_mamba2_params(key, cfg):
+    d = cfg.d_model
+    di = cfg.d_inner
+    G, N = cfg.ssm_n_groups, cfg.ssm_state
+    H = cfg.ssm_heads
+    conv_ch = di + 2 * G * N
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": normal(ks[0], (d, 2 * di + 2 * G * N + H), ("embed", "ssm_inner")),
+        "conv_w": normal(ks[1], (cfg.ssm_conv_width, conv_ch), (None, "ssm_inner"), scale=0.1),
+        "conv_b": zeros((conv_ch,), ("ssm_inner",)),
+        "dt_bias": Param(jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (H,)) *
+                    (np.log(0.1) - np.log(0.001)) + np.log(0.001)))),
+            ("ssm_heads",)),
+        "A_log": Param(jnp.log(jax.random.uniform(ks[3], (H,), minval=1.0, maxval=16.0)),
+                       ("ssm_heads",)),
+        "D": ones((H,), ("ssm_heads",)),
+        "norm": ones((di,), ("ssm_inner",)),
+        "out_proj": normal(ks[4], (di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split_in_proj(cfg, zxbcdt):
+    di, G, N, H = cfg.d_inner, cfg.ssm_n_groups, cfg.ssm_state, cfg.ssm_heads
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * G * N], axis=-1)
+    return z, xbc, dt
+
+
+def _split_xbc(cfg, xbc):
+    di, G, N = cfg.d_inner, cfg.ssm_n_groups, cfg.ssm_state
+    x, B, C = jnp.split(xbc, [di, di + G * N], axis=-1)
+    return x, B, C
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD core
+# ---------------------------------------------------------------------------
+
+def _segsum(x):
+    """x: (..., Q) -> (..., Q, Q) with out[i,j] = sum_{j<k<=i} x[k], -inf above diag."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = np.tril(np.ones((Q, Q), bool), 0)
+    return jnp.where(mask, out, -np.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int = 256):
+    """SSD in chunked (matmul) form.
+
+    x: (b, S, H, P); dt: (b, S, H) (already softplus'd, >0); A: (H,) (<0)
+    B, C: (b, S, G, N) with H divisible by G.
+    Returns y: (b, S, H, P) and final state (b, H, P, N).
+    """
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+    rep = H // G
+
+    # reshape into chunks
+    xc = x.reshape(b, nc, chunk, H, P)
+    dtc = dt.reshape(b, nc, chunk, H)
+    Bc = B.reshape(b, nc, chunk, G, N)
+    Cc = C.reshape(b, nc, chunk, G, N)
+    Bh = jnp.repeat(Bc, rep, axis=3)            # (b,nc,Q,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc * A[None, None, None, :]           # (b,nc,Q,H) decay logs (<0)
+    dA_cum = jnp.cumsum(dA, axis=2)             # within-chunk cumulative
+
+    # 1) intra-chunk (quadratic within chunk, matmul form)
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, -1, -2)))           # (b,nc,H,Q,Q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh)        # (b,nc,H,Q,Q)
+    M = scores * L
+    y_intra = jnp.einsum("bchqk,bckh,bckhp->bcqhp", M, dtc, xc)
+
+    # 2) chunk states: contribution of each chunk to the running state
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)    # (b,nc,Q,H)
+    states = jnp.einsum("bcqhn,bcqh,bcqh,bcqhp->bchpn",
+                        Bh, dtc, decay_to_end, xc)           # (b,nc,H,P,N)
+
+    # 3) inter-chunk recurrence h_c = a_c * h_{c-1} + states_c  (associative)
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])               # (b,nc,H)
+
+    def combine(e1, e2):
+        a1, s1 = e1
+        a2, s2 = e2
+        return a1 * a2, s1 * a2[..., None, None] + s2
+
+    a_all, h_all = jax.lax.associative_scan(
+        combine, (chunk_decay, states), axis=1)
+    # state entering chunk c is h_{c-1}
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(h_all[:, :1]), h_all[:, :-1]], axis=1)
+
+    # 4) inter-chunk output
+    in_decay = jnp.exp(dA_cum)                               # (b,nc,Q,H)
+    y_inter = jnp.einsum("bcqhn,bcqh,bchpn->bcqhp", Ch, in_decay, h_prev)
+
+    y = (y_intra + y_inter).reshape(b, Sp, H, P)[:, :S]
+    return y, h_all[:, -1]
+
+
+def ssd_chunked_kernel(x, dt, A, B, C, chunk: int = 128,
+                       interpret: bool = True):
+    """ssd_chunked with the intra-chunk hot spot executed by the Pallas
+    kernel (kernels/ssd_chunk.py); recurrence + inter-chunk term in JAX.
+    Same signature/semantics as ssd_chunked."""
+    from ..kernels.ssd_chunk import ssd_chunk_pallas
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+    rep = H // G
+    # (b,S,H,*) -> (b*H, nc, Q, *)
+    xk = x.transpose(0, 2, 1, 3).reshape(b * H, nc, chunk, P)
+    dtk = dt.transpose(0, 2, 1).reshape(b * H, nc, chunk)
+    Bh = jnp.repeat(B, rep, axis=2).transpose(0, 2, 1, 3)
+    Ch = jnp.repeat(C, rep, axis=2).transpose(0, 2, 1, 3)
+    Bk = Bh.reshape(b * H, nc, chunk, N)
+    Ck = Ch.reshape(b * H, nc, chunk, N)
+    ak = jnp.tile(A, b)
+
+    y_intra, states, chunk_decay = ssd_chunk_pallas(
+        xk, dtk, ak, Bk, Ck, interpret=interpret)
+
+    # inter-chunk recurrence (associative, log depth)
+    def combine(e1, e2):
+        a1, s1 = e1
+        a2, s2 = e2
+        return a1 * a2, s1 * a2[..., None, None] + s2
+
+    a_all, h_all = jax.lax.associative_scan(
+        combine, (chunk_decay, states), axis=1)     # states: (BH,nc,N,P)
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(h_all[:, :1]), h_all[:, :-1]], axis=1)
+
+    # inter-chunk output (in-chunk decay recomputed: cheap elementwise)
+    dA_cum = jnp.cumsum(dtk * ak[:, None, None], axis=-1)
+    in_decay = jnp.exp(dA_cum)                       # (BH, nc, Q)
+    y_inter = jnp.einsum("bcqn,bcq,bcnp->bcqp", Ck, in_decay, h_prev)
+
+    y = (y_intra + y_inter).reshape(b, H, Sp, P).transpose(0, 2, 1, 3)[:, :S]
+    h_final = jnp.swapaxes(h_all[:, -1], -1, -2).reshape(b, H, P, N)
+    return y, h_final
+
+
+def ssd_reference(x, dt, A, B, C):
+    """Sequential-scan oracle for tests (O(S) steps)."""
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2)
+    Ch = jnp.repeat(C, rep, axis=2)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp
+        decay = jnp.exp(dtt * A)[..., None, None]            # (b,H,1,1)
+        dBx = jnp.einsum("bh,bhn,bhp->bhpn", dtt, Bt, xt)
+        h = h * decay + dBx
+        y = jnp.einsum("bhn,bhpn->bhp", Ct, h)
+        return h, y
+
+    h0 = jnp.zeros((b, H, P, N), x.dtype)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+# ---------------------------------------------------------------------------
+# Full block forward (train/prefill) and decode step
+# ---------------------------------------------------------------------------
+
+class MambaState(NamedTuple):
+    conv: jax.Array    # (B, W-1, conv_ch) last inputs
+    ssm: jax.Array     # (B, H, P, N)
+
+
+def init_mamba_state(batch: int, cfg, dtype=jnp.float32) -> MambaState:
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_n_groups * cfg.ssm_state
+    return MambaState(
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+        ssm=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                      dtype),
+    )
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv, xbc: (B,S,C), w: (W,C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(W))
+    return out + b
+
+
+def mamba2_forward(params, x_in, cfg, chunk: int = 256,
+                   return_state: bool = False):
+    """x_in: (B,S,d_model) -> (B,S,d_model). Training/prefill path.
+    With ``return_state`` also returns the decode state after the sequence
+    (prefill -> decode handoff)."""
+    B_, S, _ = x_in.shape
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    G, N = cfg.ssm_n_groups, cfg.ssm_state
+    z, xbc_raw, dt = _split_in_proj(cfg, x_in @ params["in_proj"])
+    xbc = jax.nn.silu(_causal_conv(xbc_raw, params["conv_w"], params["conv_b"]))
+    x, Bmat, Cmat = _split_xbc(cfg, xbc)
+    x = x.reshape(B_, S, H, P)
+    Bmat = Bmat.reshape(B_, S, G, N)
+    Cmat = Cmat.reshape(B_, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, h_final = ssd_chunked(x.astype(jnp.float32), dt, A,
+                             Bmat.astype(jnp.float32), Cmat.astype(jnp.float32),
+                             chunk=chunk)
+    y = y + x.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(B_, S, cfg.d_inner).astype(x_in.dtype)
+    y = layers.rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    if not return_state:
+        return out
+    # conv state: last (W-1) raw xbc inputs, left-padded for short sequences
+    W = cfg.ssm_conv_width
+    pad = jnp.pad(xbc_raw, ((0, 0), (W - 1, 0), (0, 0)))
+    conv_state = pad[:, pad.shape[1] - (W - 1):, :].astype(jnp.float32)
+    return out, {"conv": conv_state, "ssm": h_final}
+
+
+def mamba2_decode(params, x_in, state: MambaState, cfg):
+    """One-token decode: x_in (B,1,d) -> (out (B,1,d), new state)."""
+    B_ = x_in.shape[0]
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    G, N = cfg.ssm_n_groups, cfg.ssm_state
+    z, xbc, dt = _split_in_proj(cfg, x_in @ params["in_proj"])
+    # conv over (state ++ current)
+    win = jnp.concatenate([state.conv, xbc], axis=1)          # (B, W, C)
+    conv_out = jnp.einsum("bwc,wc->bc", win, params["conv_w"]) + params["conv_b"]
+    xbc_t = jax.nn.silu(conv_out)[:, None, :]
+    new_conv = win[:, 1:, :]
+    x, Bmat, Cmat = _split_xbc(cfg, xbc_t)
+    x = x.reshape(B_, H, P)
+    Bmat = jnp.repeat(Bmat.reshape(B_, G, N), H // G, axis=1)  # (B,H,N)
+    Cmat = jnp.repeat(Cmat.reshape(B_, G, N), H // G, axis=1)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)[..., None, None]
+    dBx = jnp.einsum("bh,bhn,bhp->bhpn", dt, Bmat.astype(jnp.float32),
+                     x.astype(jnp.float32))
+    h = state.ssm * decay + dBx
+    y = jnp.einsum("bhn,bhpn->bhp", Cmat.astype(jnp.float32), h)
+    y = y + x.astype(jnp.float32) * params["D"][None, :, None]
+    y = y.reshape(B_, 1, cfg.d_inner).astype(x_in.dtype)
+    y = layers.rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    return y @ params["out_proj"], MambaState(new_conv, h)

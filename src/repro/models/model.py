@@ -1,0 +1,206 @@
+"""Model dispatch: init/abstract params, train/prefill/serve step builders.
+
+This is the public API surface used by tests, examples, benchmarks, and the
+launchers. Family routing:
+
+  dense | moe | ssm | hybrid | vlm  -> models.transformer
+  audio                              -> models.whisper (enc-dec)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from . import transformer, whisper
+from .transformer import DistContext
+
+
+def _mod(cfg: ModelConfig):
+    return whisper if cfg.family == "audio" else transformer
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_params_and_axes(rng, cfg: ModelConfig, dtype=jnp.float32):
+    """Returns (params, axes) trees. dtype applied to all floating leaves."""
+    tree = _mod(cfg).make_model_params(rng, cfg)
+    params, axes = L.split_params(tree)
+    if dtype != jnp.float32:
+        params = jax.tree.map(lambda a: a.astype(dtype), params)
+    return params, axes
+
+
+def init_params(rng, cfg: ModelConfig, dtype=jnp.float32):
+    return init_params_and_axes(rng, cfg, dtype)[0]
+
+
+def abstract_params_and_axes(cfg: ModelConfig, dtype=jnp.float32):
+    """ShapeDtypeStruct params (no allocation) + axes tree, for dry-runs.
+
+    Param's axes ride in the treedef (aux data), so eval_shape of the Param
+    tree preserves them without materializing anything."""
+    tree = jax.eval_shape(lambda k: _mod(cfg).make_model_params(k, cfg),
+                          jax.random.PRNGKey(0))
+    params, axes = L.split_params(tree)
+    if dtype != jnp.float32:
+        params = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, dtype), params)
+    return params, axes
+
+
+def transform_params_for_dualsparse(params, cfg: ModelConfig, calib_x,
+                                    n_ep_devices: int = 0,
+                                    target_drop_rate: Optional[float] = None):
+    """Apply the paper's §4.2 pipeline to every MoE layer of a model:
+    neuron-importance profiling -> reconstruction -> partial transformation
+    (P = cfg.dualsparse.partition_p), then strided placement when EP is used.
+
+    calib_x: (T, d_model) calibration activations (shared across layers —
+    a practical simplification of per-layer profiling; see DESIGN.md).
+
+    ``target_drop_rate``: beyond-paper per-layer threshold calibration (the
+    paper's §5.3.3 future work): each layer gets its own (T²_major, T²_minor)
+    hitting the target drop rate on its *own* router's calibration scores,
+    stored as blocks["moe"]["thresholds"] (2,) per layer."""
+    from ..core import drop as drop_mod
+    from ..core import gating, reconstruct, setp
+    ds = cfg.dualsparse
+    if not (cfg.is_moe and ds.enabled):
+        return params
+
+    def xform(moe_p):
+        out = reconstruct.partition_and_reconstruct(
+            moe_p, calib_x, cfg, p=ds.partition_p, method=ds.importance)
+        if n_ep_devices:
+            out = setp.place_params_strided(out, n_ep_devices)
+        if target_drop_rate is not None:
+            # calibrate both thresholds in RATE space (band = ±5% drop rate
+            # around the target) so flops saved == target regardless of the
+            # layer's score spread: saved = (t-δ) + ½·2δ = target.
+            r = gating.route(calib_x, moe_p["wg"], cfg.top_k,
+                             cfg.router_norm_topk)
+            delta = 0.05
+            t_major = drop_mod.calibrate_threshold(
+                r.norm_score, max(target_drop_rate - delta, 0.0))
+            t_minor = drop_mod.calibrate_threshold(
+                r.norm_score, min(target_drop_rate + delta, 1.0))
+            out["thresholds"] = jnp.stack([t_major, t_minor])
+        return out
+
+    blocks = params["blocks"]
+    if "moe" in blocks:
+        # stacked layers: vmap the transform over the layer axis
+        moe_stack = blocks["moe"]
+        new_moe = jax.vmap(xform)(moe_stack)
+        params = dict(params)
+        params["blocks"] = {**blocks, "moe": new_moe}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Loss / steps
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, targets):
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, window: int = 0,
+            dist: Optional[DistContext] = None, aux_coef: float = 0.0):
+    """Cross entropy (+ Switch-style MoE load-balance aux when aux_coef>0)."""
+    if aux_coef and cfg.is_moe and cfg.family != "audio":
+        logits, aux = _mod(cfg).forward(params, batch, cfg, window=window,
+                                        dist=dist, with_aux=True)
+        return cross_entropy(logits, batch["targets"]) + aux_coef * aux
+    logits = _mod(cfg).forward(params, batch, cfg, window=window, dist=dist)
+    return cross_entropy(logits, batch["targets"])
+
+
+def make_train_step(cfg: ModelConfig, optimizer, *, window: int = 0,
+                    dist: Optional[DistContext] = None,
+                    aux_coef: float = 0.0):
+    """(params, opt_state, batch) -> (params, opt_state, loss)."""
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch, cfg,
+                                                  window=window, dist=dist,
+                                                  aux_coef=aux_coef)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = jax.tree.map(lambda p, u: p + u, params, updates)
+        return params, opt_state, loss
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig, *, cache_len: int = 0, window: int = 0,
+                      dist: Optional[DistContext] = None,
+                      cache_dtype=None):
+    """batch -> (logits (B,S,vocab), populated decode cache)."""
+    import jax.numpy as _jnp
+    cd = cache_dtype if cache_dtype is not None else _jnp.bfloat16
+    def step(params, batch):
+        return _mod(cfg).prefill(params, batch, cfg, cache_len=cache_len,
+                                 window=window, dist=dist, cache_dtype=cd)
+    return step
+
+
+def make_serve_step(cfg: ModelConfig, *, window: int = 0,
+                    dist: Optional[DistContext] = None):
+    """(params, token (B,1), cache) -> (logits, cache) — ONE new token."""
+    def step(params, token, cache):
+        return _mod(cfg).decode_step(params, token, cache, cfg,
+                                     window=window, dist=dist)
+    return step
+
+
+def context_len_for(cfg: ModelConfig, prompt_len: int, new_tokens: int) -> int:
+    """KV capacity needed to prefill ``prompt_len`` tokens (plus any stub
+    frontend prefix) and then generate ``new_tokens``."""
+    prefix = cfg.n_frontend_tokens if cfg.frontend == "vision" else 0
+    return prompt_len + prefix + new_tokens
+
+
+def init_cache(cfg: ModelConfig, batch: int, context_len: int, *,
+               window: int = 0, dtype=jnp.bfloat16):
+    return _mod(cfg).init_cache(cfg, batch, context_len, window=window,
+                                dtype=dtype)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, context_len: int, *,
+                   window: int = 0, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, context_len, window=window,
+                           dtype=dtype))
+
+
+# ---------------------------------------------------------------------------
+# Input construction (concrete); abstract variants live in launch.dryrun
+# ---------------------------------------------------------------------------
+
+def make_batch(rng, cfg: ModelConfig, batch: int, seq: int, kind: str,
+               dtype=jnp.float32):
+    """Concrete random batch for smoke tests / examples."""
+    ks = jax.random.split(rng, 3)
+    out: Dict[str, Any] = {
+        "tokens": jax.random.randint(ks[0], (batch, seq), 0, cfg.vocab_size),
+    }
+    if kind == "train":
+        out["targets"] = jax.random.randint(ks[1], (batch, seq), 0,
+                                            cfg.vocab_size)
+    if cfg.frontend == "vision":
+        out["frontend"] = jax.random.normal(
+            ks[2], (batch, cfg.n_frontend_tokens, cfg.d_model), dtype) * 0.1
+    if cfg.frontend == "audio":
+        out["audio_embeds"] = jax.random.normal(
+            ks[2], (batch, cfg.n_frontend_tokens, cfg.d_model), dtype) * 0.1
+    return out

@@ -1,0 +1,526 @@
+"""Decoder-only transformer stack covering the dense / moe / ssm / hybrid /
+vlm families, with jax.lax.scan over stacked layer params.
+
+Three entry modes per model:
+  * train/prefill forward over a full sequence (blockwise attention),
+  * single-token decode against a cache (dict-of-arrays, stacked over layers).
+
+Distribution is injected via ``DistContext`` — when present, the MoE layer
+uses the S-ETP shard_map path (paper §3.3) and activations get sharding
+constraints; when absent everything is single-device pure JAX (tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core import moe as moe_mod
+from ..core import setp as setp_mod
+from . import attention as attn
+from . import layers as L
+from . import mamba2 as mm
+from .layers import Param, normal, ones, zeros
+
+
+@dataclasses.dataclass(frozen=True)
+class DistContext:
+    """How to distribute the forward pass."""
+    mesh: Mesh
+    moe_impl: str = "setp"        # "setp" (shard_map AlltoAll EP) | "gspmd"
+    dualsparse: bool = False      # 2T-Drop enabled (params pre-transformed)
+    load_aware: bool = False
+    use_kernel: bool = False
+    remat: bool = False           # activation checkpointing on blocks
+    remat_policy: str = "none"    # none | dots — jax.checkpoint policy
+
+    def constrain(self, x, spec: P):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+def _maybe_constrain(x, dist: Optional[DistContext], spec):
+    if dist is None:
+        return x
+    from ..distributed.sharding import batch_spec
+    return dist.constrain(x, batch_spec(x.shape[0], dist.mesh, extra=spec))
+
+
+def _residual_spec(dist: Optional[DistContext], seq_len: int,
+                   family: str = "dense"):
+    """Sequence parallelism: keep the (B, S, d) residual stream sharded over
+    the model axis along S whenever it divides — norms/projections are
+    per-token, attention context-parallelizes its q-blocks along the same
+    boundaries, and the S-ETP MoE wants exactly this layout. Re-replicating
+    between layers costs an all-gather of the full residual per layer.
+
+    NOT for ssm/hybrid: the Mamba causal conv + chunk scan recur along S,
+    so a seq-sharded residual forces halo exchanges/permutes every layer
+    (measured: zamba2 train collectives 1.9 -> 4.7 s). Those families keep
+    the batch-only layout."""
+    if dist is None or family in ("ssm", "hybrid"):
+        return (None, None)
+    model_n = dist.mesh.shape.get("model", 1)
+    if model_n > 1 and seq_len % model_n == 0 and seq_len // model_n >= 128:
+        return ("model", None)
+    return (None, None)
+
+
+# ---------------------------------------------------------------------------
+# Block params
+# ---------------------------------------------------------------------------
+
+def make_block_params(key, cfg):
+    """One decoder block (pre-norm). Families:
+    dense/vlm: attn + mlp; moe: attn + moe; ssm: mamba only."""
+    ks = jax.random.split(key, 4)
+    if cfg.family == "ssm":
+        return {"ln1": ones((cfg.d_model,), ("embed",)),
+                "mamba": mm.make_mamba2_params(ks[0], cfg)}
+    p: Dict[str, Any] = {"ln1": ones((cfg.d_model,), ("embed",)),
+                         "ln2": ones((cfg.d_model,), ("embed",))}
+    if cfg.attn_kind == "mla":
+        p["attn"] = attn.make_mla_params(ks[0], cfg)
+    else:
+        p["attn"] = attn.make_gqa_params(ks[0], cfg)
+    if cfg.is_moe:
+        p["moe"] = moe_mod.make_moe_params(ks[1], cfg)
+    else:
+        p["mlp"] = L.make_mlp_params(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_kind)
+    return p
+
+
+def make_hybrid_params(key, cfg):
+    """Zamba2-style: stacked mamba blocks + ONE shared attention block
+    (attn + its own mlp) applied every ``attn_every`` layers."""
+    k1, k2 = jax.random.split(key)
+    mamba_cfg = cfg
+    stacked = L.stack_layer_params(
+        k1, cfg.n_layers,
+        lambda k: {"ln1": ones((cfg.d_model,), ("embed",)),
+                   "mamba": mm.make_mamba2_params(k, cfg)})
+    ks = jax.random.split(k2, 3)
+    shared = {
+        "ln1": ones((cfg.d_model,), ("embed",)),
+        "attn": attn.make_gqa_params(ks[0], cfg),
+        "ln2": ones((cfg.d_model,), ("embed",)),
+        "mlp": L.make_mlp_params(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_kind),
+    }
+    return {"mamba_blocks": stacked, "shared_attn": shared}
+
+
+# ---------------------------------------------------------------------------
+# Block forward
+# ---------------------------------------------------------------------------
+
+def _attn_forward(p, x, positions, cfg, *, window: int, dist,
+                  capture_cap: int = 0, cache_dtype=jnp.bfloat16):
+    """capture_cap > 0: also return the populated decode cache."""
+    if cfg.attn_kind == "mla":
+        if capture_cap:
+            return attn.mla_prefill_attention(p, x, positions, cfg,
+                                              window=window, cap=capture_cap,
+                                              cache_dtype=cache_dtype,
+                                              dist=dist)
+        return attn.mla_attention(p, x, positions, cfg, window=window,
+                                  dist=dist)
+    if capture_cap:
+        return attn.gqa_prefill_attention(p, x, positions, cfg,
+                                          window=window, cap=capture_cap,
+                                          cache_dtype=cache_dtype, dist=dist)
+    return attn.gqa_attention(p, x, positions, cfg, window=window,
+                              dist=dist)
+
+
+def _moe_forward(p, x, cfg, dist: Optional[DistContext], aux: bool = False):
+    """Returns y, or (y, aux_loss) when ``aux`` (training)."""
+    B, S, d = x.shape
+    aux_val = None
+    if aux:
+        aux_val = moe_mod.aux_loss_for(p, x.reshape(-1, d), cfg)
+    if dist is not None and dist.moe_impl == "setp":
+        y = setp_mod.setp_moe_forward(
+            p, x, cfg, dist.mesh, dualsparse=dist.dualsparse,
+            load_aware=dist.load_aware, use_kernel=dist.use_kernel)
+        return (y, aux_val) if aux else y
+    xt = x.reshape(-1, d)
+    if dist is not None and dist.dualsparse:
+        pairs = moe_mod.route_dualsparse(p, xt, cfg)
+        y = moe_mod.moe_forward_dispatch(p, xt, cfg, pairs=pairs,
+                                         capacity_factor=2.0,
+                                         use_kernel=dist.use_kernel if dist else False)
+    else:
+        y = moe_mod.moe_forward_dispatch(p, xt, cfg, capacity_factor=2.0)
+    y = y.reshape(B, S, d)
+    return (y, aux_val) if aux else y
+
+
+def block_forward(bp, x, positions, cfg, *, window: int = 0,
+                  dist: Optional[DistContext] = None, capture_cap: int = 0,
+                  cache_dtype=jnp.bfloat16, with_aux: bool = False):
+    """Full-sequence block forward (train / prefill). With capture_cap the
+    return is (x, cache_layer) for the prefill->decode handoff; with_aux
+    returns (x, load-balance aux loss) for MoE training."""
+    if cfg.family == "ssm" or "mamba" in bp:
+        h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+        if capture_cap:
+            y, st = mm.mamba2_forward(bp["mamba"], h, cfg, return_state=True)
+            return x + y, st
+        x = x + mm.mamba2_forward(bp["mamba"], h, cfg)
+        return (x, jnp.zeros(())) if with_aux else x
+    h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+    cache_layer = None
+    if capture_cap:
+        y, cache_layer = _attn_forward(bp["attn"], h, positions, cfg,
+                                       window=window, dist=dist,
+                                       capture_cap=capture_cap,
+                                       cache_dtype=cache_dtype)
+        x = x + y
+    else:
+        x = x + _attn_forward(bp["attn"], h, positions, cfg, window=window,
+                              dist=dist)
+    h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+    if "moe" in bp:
+        if with_aux:
+            y, aux = _moe_forward(bp["moe"], h, cfg, dist, aux=True)
+            x = x + y
+            return x, aux
+        x = x + _moe_forward(bp["moe"], h, cfg, dist)
+    else:
+        x = x + L.apply_mlp(bp["mlp"], h, cfg.mlp_kind)
+    if with_aux:
+        return x, jnp.zeros(())
+    return (x, cache_layer) if capture_cap else x
+
+
+def block_decode(bp, x, cache_layer, pos, cfg, *, window: int = 0,
+                 dist: Optional[DistContext] = None):
+    """One-token decode. cache_layer is this layer's cache dict slice."""
+    if cfg.family == "ssm" or "mamba" in bp:
+        h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+        st = mm.MambaState(cache_layer["conv"], cache_layer["ssm"])
+        y, st = mm.mamba2_decode(bp["mamba"], h, st, cfg)
+        return x + y, {"conv": st.conv, "ssm": st.ssm}
+    h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+    if cfg.attn_kind == "mla":
+        y, cache_layer = attn.mla_decode_attention(
+            bp["attn"], h, cache_layer, pos, cfg, window)
+    else:
+        y, cache_layer = attn.gqa_decode_attention(
+            bp["attn"], h, cache_layer, pos, cfg, window)
+    x = x + y
+    h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+    if "moe" in bp:
+        x = x + _moe_forward(bp["moe"], h, cfg, dist)
+    else:
+        x = x + L.apply_mlp(bp["mlp"], h, cfg.mlp_kind)
+    return x, cache_layer
+
+
+# ---------------------------------------------------------------------------
+# Model params
+# ---------------------------------------------------------------------------
+
+def make_model_params(key, cfg):
+    k_emb, k_blocks, k_fin = jax.random.split(key, 3)
+    p: Dict[str, Any] = {
+        "embed": L.make_embed_params(k_emb, cfg.vocab_size, cfg.d_model,
+                                     cfg.tie_embeddings),
+        "final_norm": ones((cfg.d_model,), ("embed",)),
+    }
+    if cfg.family == "hybrid":
+        p.update(make_hybrid_params(k_blocks, cfg))
+    else:
+        p["blocks"] = L.stack_layer_params(
+            k_blocks, cfg.n_layers, lambda k: make_block_params(k, cfg))
+    if cfg.frontend:
+        # stub frontends provide embeddings directly; a linear projector
+        # adapts them to d_model (the one real parameter of the stub).
+        p["frontend_proj"] = normal(k_fin, (cfg.d_model, cfg.d_model),
+                                    ("embed", None))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Stack forward (scan over layers)
+# ---------------------------------------------------------------------------
+
+def _positions_for(cfg, B, S, offset=0):
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (B, S))
+    if cfg.mrope_sections:
+        # stub M-RoPE positions: text-style (t == h == w); real VLM inputs
+        # may pass explicit (3,B,S) grids via batch["positions"]
+        pos = jnp.broadcast_to(pos[None], (3, B, S))
+    return pos
+
+
+def stack_forward(params, x, positions, cfg, *, window: int = 0,
+                  dist: Optional[DistContext] = None, capture_cap: int = 0,
+                  cache_dtype=jnp.bfloat16, with_aux: bool = False):
+    """x: (B,S,d) -> (B,S,d) through all blocks. With capture_cap also
+    returns the layer-stacked decode cache (prefill); with_aux returns
+    (x, summed MoE load-balance aux loss)."""
+    if cfg.family == "hybrid":
+        out = _hybrid_forward(params, x, positions, cfg, window=window,
+                              dist=dist, capture_cap=capture_cap,
+                              cache_dtype=cache_dtype)
+        return (out, jnp.zeros(())) if with_aux else out
+
+    fwd = functools.partial(block_forward, cfg=cfg, window=window, dist=dist,
+                            capture_cap=capture_cap, cache_dtype=cache_dtype,
+                            with_aux=with_aux)
+    if dist is not None and dist.remat and not capture_cap:
+        policy = None
+        if dist.remat_policy == "dots":
+            policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        fwd = jax.checkpoint(fwd, policy=policy)
+
+    res_spec = _residual_spec(dist, x.shape[1], cfg.family)
+
+    def body(h, bp):
+        h = _maybe_constrain(h, dist, res_spec)
+        out = fwd(bp, h, positions)
+        if capture_cap or with_aux:
+            return out
+        return out, None
+
+    x, caches = jax.lax.scan(body, x, params["blocks"])
+    if capture_cap:
+        return x, {"layers": caches}
+    if with_aux:
+        return x, jnp.sum(caches)
+    return x
+
+
+def _hybrid_forward(params, x, positions, cfg, *, window: int = 0,
+                    dist: Optional[DistContext] = None, capture_cap: int = 0,
+                    cache_dtype=jnp.bfloat16):
+    """Zamba2: shared attention block before every ``attn_every``-th mamba
+    layer; mamba segments run under scan, attention occurrences are a python
+    loop over the (small) number of groups so FLOPs are exact."""
+    n = cfg.n_layers
+    every = cfg.attn_every
+    n_occ = (n + every - 1) // every
+    shared = params["shared_attn"]
+    attn_caches = []
+    mamba_caches = []
+
+    mamba_fwd = functools.partial(block_forward, cfg=cfg, dist=dist,
+                                  capture_cap=capture_cap,
+                                  cache_dtype=cache_dtype)
+    if dist is not None and dist.remat and not capture_cap:
+        mamba_fwd = jax.checkpoint(mamba_fwd)
+
+    def mamba_body(h, bp):
+        out = mamba_fwd(bp, h, positions)
+        return out if capture_cap else (out, None)
+
+    for occ in range(n_occ):
+        lo, hi = occ * every, min((occ + 1) * every, n)
+        h = L.rms_norm(x, shared["ln1"], cfg.norm_eps)
+        if capture_cap:
+            y, ac = attn.gqa_prefill_attention(shared["attn"], h, positions,
+                                               cfg, window=window,
+                                               cap=capture_cap,
+                                               cache_dtype=cache_dtype)
+            attn_caches.append(ac)
+            x = x + y
+        else:
+            x = x + attn.gqa_attention(shared["attn"], h, positions, cfg,
+                                       window=window)
+        h = L.rms_norm(x, shared["ln2"], cfg.norm_eps)
+        x = x + L.apply_mlp(shared["mlp"], h, cfg.mlp_kind)
+        seg = jax.tree.map(lambda a: a[lo:hi], params["mamba_blocks"])
+        x, segc = jax.lax.scan(mamba_body, x, seg)
+        if capture_cap:
+            mamba_caches.append(segc)
+    if capture_cap:
+        cache = {
+            "mamba": jax.tree.map(lambda *xs: jnp.concatenate(xs, 0),
+                                  *mamba_caches),
+            "attn": jax.tree.map(lambda *xs: jnp.stack(xs), *attn_caches),
+        }
+        return x, cache
+    return x
+
+
+def stack_decode(params, x, cache, pos, cfg, *, window: int = 0,
+                 dist: Optional[DistContext] = None):
+    """One-token decode through all blocks. cache: layer-stacked dict."""
+    if cfg.family == "hybrid":
+        return _hybrid_decode(params, x, cache, pos, cfg, window=window,
+                              dist=dist)
+
+    def body(h, xs):
+        bp, cl = xs
+        h, cl = block_decode(bp, h, cl, pos, cfg, window=window, dist=dist)
+        return h, cl
+
+    x, new_layers = jax.lax.scan(body, x, (params["blocks"], cache["layers"]))
+    return x, {"layers": new_layers}
+
+
+def _hybrid_decode(params, x, cache, pos, cfg, *, window: int = 0,
+                   dist: Optional[DistContext] = None):
+    n, every = cfg.n_layers, cfg.attn_every
+    n_occ = (n + every - 1) // every
+    shared = params["shared_attn"]
+    new_attn = {"k": [], "v": []}
+    mamba_cache = cache["mamba"]
+    new_mamba = []
+
+    def mamba_body(h, xs):
+        bp, cl = xs
+        h, cl = block_decode(bp, h, cl, pos, cfg, dist=dist)
+        return h, cl
+
+    for occ in range(n_occ):
+        lo, hi = occ * every, min((occ + 1) * every, n)
+        h = L.rms_norm(x, shared["ln1"], cfg.norm_eps)
+        acache = {"k": cache["attn"]["k"][occ], "v": cache["attn"]["v"][occ]}
+        y, acache = attn.gqa_decode_attention(shared["attn"], h, acache, pos,
+                                              cfg, window)
+        x = x + y
+        new_attn["k"].append(acache["k"])
+        new_attn["v"].append(acache["v"])
+        h = L.rms_norm(x, shared["ln2"], cfg.norm_eps)
+        x = x + L.apply_mlp(shared["mlp"], h, cfg.mlp_kind)
+        seg_p = jax.tree.map(lambda a: a[lo:hi], params["mamba_blocks"])
+        seg_c = jax.tree.map(lambda a: a[lo:hi], mamba_cache)
+        x, seg_c = jax.lax.scan(mamba_body, x, (seg_p, seg_c))
+        new_mamba.append(seg_c)
+    new_cache = {
+        "mamba": jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_mamba),
+        "attn": {"k": jnp.stack(new_attn["k"]), "v": jnp.stack(new_attn["v"])},
+    }
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Top-level forwards
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params, batch, cfg, offset=0):
+    """Token embeddings (+ stub frontend embeddings prepended for vlm/audio
+    decoder-only archs). Returns (x, positions, n_prefix)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    n_prefix = 0
+    if cfg.frontend == "vision" and "frontend" in batch:
+        fe = batch["frontend"] @ params["frontend_proj"]
+        x = jnp.concatenate([fe.astype(x.dtype), x], axis=1)
+        n_prefix = fe.shape[1]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = _positions_for(cfg, B, x.shape[1], offset)
+    return x, positions, n_prefix
+
+
+def forward(params, batch, cfg, *, window: int = 0,
+            dist: Optional[DistContext] = None, with_aux: bool = False):
+    """Full-sequence forward -> logits (B, S, vocab) over the token part.
+    with_aux additionally returns the summed MoE load-balance loss."""
+    x, positions, n_prefix = embed_inputs(params, batch, cfg)
+    x = _maybe_constrain(x, dist, _residual_spec(dist, x.shape[1],
+                                                 cfg.family))
+    aux = jnp.zeros(())
+    if with_aux:
+        x, aux = stack_forward(params, x, positions, cfg, window=window,
+                               dist=dist, with_aux=True)
+    else:
+        x = stack_forward(params, x, positions, cfg, window=window,
+                          dist=dist)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    logits = L.unembed(params["embed"], x)
+    if dist is not None:
+        logits = _maybe_constrain(logits, dist, (None, "model"))
+    return (logits, aux) if with_aux else logits
+
+
+def prefill(params, batch, cfg, *, cache_len: int = 0, window: int = 0,
+            dist: Optional[DistContext] = None, cache_dtype=jnp.bfloat16):
+    """Prefill: full forward AND populated decode cache.
+
+    Returns (logits (B,S,vocab), cache) with cache["pos"] set past the
+    prompt (including any frontend prefix)."""
+    x, positions, n_prefix = embed_inputs(params, batch, cfg)
+    S_total = x.shape[1]
+    cap = max(cache_len, S_total) if not window else \
+        min(cache_len if cache_len else S_total, window)
+    x = _maybe_constrain(x, dist, _residual_spec(dist, S_total, cfg.family))
+    x, cache = stack_forward(params, x, positions, cfg, window=window,
+                             dist=dist, capture_cap=cap,
+                             cache_dtype=cache_dtype)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    logits = L.unembed(params["embed"], x)
+    cache["pos"] = jnp.asarray(S_total, jnp.int32)
+    return logits, cache
+
+
+def decode_step(params, token, cache, cfg, *, window: int = 0,
+                dist: Optional[DistContext] = None):
+    """token: (B,1) -> (logits (B,1,vocab), new cache). cache carries 'pos'."""
+    pos = cache["pos"]
+    x = L.embed(params["embed"], token)
+    x, new_cache = stack_decode(params, x, cache, pos, cfg, window=window,
+                                dist=dist)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cache init
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, context_len: int, *, window: int = 0,
+               dtype=jnp.bfloat16):
+    """Layer-stacked decode cache. ``context_len`` is the KV capacity
+    (== window when windowed)."""
+    cap = min(window, context_len) if window else context_len
+    hd = cfg.resolved_head_dim
+
+    def one_attn():
+        return attn.init_kv_cache(batch, cap, cfg.n_kv_heads, hd, dtype)
+
+    def one_mamba():
+        st = mm.init_mamba_state(batch, cfg, jnp.float32)
+        return {"conv": st.conv, "ssm": st.ssm}
+
+    if cfg.family == "hybrid":
+        n_occ = (cfg.n_layers + cfg.attn_every - 1) // cfg.attn_every
+        cache = {
+            "mamba": jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[one_mamba() for _ in range(cfg.n_layers)]),
+            "attn": jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[one_attn() for _ in range(n_occ)]),
+        }
+    elif cfg.family == "ssm":
+        cache = {"layers": jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[one_mamba() for _ in range(cfg.n_layers)])}
+    elif cfg.attn_kind == "mla":
+        cache = {"layers": jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[attn.init_mla_cache(batch, cap, cfg, dtype)
+              for _ in range(cfg.n_layers)])}
+    else:
+        cache = {"layers": jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[one_attn() for _ in range(cfg.n_layers)])}
+    cache["pos"] = jnp.zeros((), jnp.int32)
+    return cache

@@ -1,0 +1,258 @@
+"""Whisper-style encoder-decoder backbone (audio frontend is a STUB).
+
+input_specs provide precomputed frame embeddings (B, n_frames, d_model) in
+place of the mel+conv frontend (the assignment's one allowed stub). The
+encoder is a non-causal transformer over frames; the decoder is causal with
+cross-attention to the encoder output. Layers scan over stacked params.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import attention as attn
+from . import layers as L
+from .layers import normal, ones
+
+
+def _sinusoid(n: int, d: int):
+    pos = np.arange(n)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * i / d))
+    return jnp.asarray(np.concatenate([np.sin(ang), np.cos(ang)], -1),
+                       jnp.float32)
+
+
+def make_enc_block(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": ones((cfg.d_model,), ("embed",)),
+        "attn": attn.make_gqa_params(ks[0], cfg),
+        "ln2": ones((cfg.d_model,), ("embed",)),
+        "mlp": L.make_mlp_params(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_kind),
+    }
+
+
+def make_dec_block(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": ones((cfg.d_model,), ("embed",)),
+        "attn": attn.make_gqa_params(ks[0], cfg),
+        "ln_x": ones((cfg.d_model,), ("embed",)),
+        "xattn": attn.make_gqa_params(ks[1], cfg),
+        "ln2": ones((cfg.d_model,), ("embed",)),
+        "mlp": L.make_mlp_params(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp_kind),
+    }
+
+
+def make_model_params(key, cfg):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "embed": L.make_embed_params(k1, cfg.vocab_size, cfg.d_model,
+                                     cfg.tie_embeddings),
+        "frontend_proj": normal(k2, (cfg.d_model, cfg.d_model),
+                                ("embed", None)),
+        "encoder": L.stack_layer_params(k3, cfg.encoder_layers,
+                                        lambda k: make_enc_block(k, cfg)),
+        "enc_norm": ones((cfg.d_model,), ("embed",)),
+        "decoder": L.stack_layer_params(k4, cfg.n_layers,
+                                        lambda k: make_dec_block(k, cfg)),
+        "final_norm": ones((cfg.d_model,), ("embed",)),
+    }
+
+
+def _self_attn_nocache(p, x, positions, cfg, causal, dist=None):
+    q, k, v = attn.gqa_project_qkv(p, x, positions, cfg)
+    if x.shape[1] > 1024:
+        shard_blocks, qb = attn.make_shard_blocks(dist, x.shape[1])
+        o = attn.blockwise_attention(q, k, v, causal=causal, q_block=qb,
+                                     shard_blocks=shard_blocks)
+    else:
+        o = attn.plain_attention(q, k, v, causal=causal)
+    return jnp.einsum("bshgk,hgkd->bsd", o, p["wo"])
+
+
+def _cross_attn(p, x, enc_kv, cfg, dist=None):
+    """x: (B,S,d) queries; enc_kv: (k, v) each (B, T, Hkv, D) (pre-projected,
+    no RoPE — whisper uses absolute positions)."""
+    q = jnp.einsum("bsd,dhgk->bshgk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    k, v = enc_kv
+    if x.shape[1] > 1024:
+        shard_blocks, qb = attn.make_shard_blocks(dist, x.shape[1])
+        o = attn.blockwise_attention(q, k, v, causal=False, q_block=qb,
+                                     shard_blocks=shard_blocks)
+    else:
+        o = attn.plain_attention(q, k, v, causal=False)
+    return jnp.einsum("bshgk,hgkd->bsd", o, p["wo"])
+
+
+def encode(params, audio_embeds, cfg, dist=None):
+    """audio_embeds: (B, T, d) stub frontend output."""
+    x = audio_embeds @ params["frontend_proj"]
+    T = x.shape[1]
+    x = x + _sinusoid(T, cfg.d_model).astype(x.dtype)
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None],
+                           (x.shape[0], T))
+
+    def block(h, bp):
+        a = L.rms_norm(h, bp["ln1"], cfg.norm_eps)
+        # encoder self-attention is non-causal over absolute-position embeds
+        # (RoPE at position 0 is the identity)
+        q, k, v = attn.gqa_project_qkv(bp["attn"], a, jnp.zeros_like(pos), cfg)
+        fn = attn.blockwise_attention if h.shape[1] > 1024 else attn.plain_attention
+        o = fn(q, k, v, causal=False)
+        h = h + jnp.einsum("bshgk,hgkd->bsd", o, bp["attn"]["wo"])
+        a = L.rms_norm(h, bp["ln2"], cfg.norm_eps)
+        return h + L.apply_mlp(bp["mlp"], a, cfg.mlp_kind)
+
+    if dist is not None and dist.remat:
+        block = jax.checkpoint(block)
+
+    def body(h, bp):
+        return block(h, bp), None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _enc_kv(params, enc_out, cfg):
+    """Pre-project encoder K/V for every decoder layer: (L,B,T,Hkv,D)×2."""
+    def proj(bp):
+        k = jnp.einsum("btd,dhk->bthk", enc_out, bp["xattn"]["wk"])
+        v = jnp.einsum("btd,dhk->bthk", enc_out, bp["xattn"]["wv"])
+        if "bk" in bp["xattn"]:
+            k = k + bp["xattn"]["bk"]
+            v = v + bp["xattn"]["bv"]
+        return k, v
+    return jax.vmap(proj)(params["decoder"])
+
+
+def forward(params, batch, cfg, *, window: int = 0, dist=None):
+    """Training/prefill: batch = {"tokens": (B,S), "audio_embeds": (B,T,d)}."""
+    enc_out = encode(params, batch["audio_embeds"], cfg, dist=dist)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    x = x + _sinusoid(S, cfg.d_model).astype(x.dtype)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    ck, cv = _enc_kv(params, enc_out, cfg)          # (L,B,T,H,D)
+
+    def block(h, bp, k_l, v_l):
+        a = L.rms_norm(h, bp["ln1"], cfg.norm_eps)
+        h = h + _self_attn_nocache(bp["attn"], a, pos, cfg, causal=True,
+                                   dist=dist)
+        a = L.rms_norm(h, bp["ln_x"], cfg.norm_eps)
+        h = h + _cross_attn(bp["xattn"], a, (k_l, v_l), cfg, dist=dist)
+        a = L.rms_norm(h, bp["ln2"], cfg.norm_eps)
+        return h + L.apply_mlp(bp["mlp"], a, cfg.mlp_kind)
+
+    if dist is not None and dist.remat:
+        block = jax.checkpoint(block)
+
+    def body(h, xs):
+        bp, k_l, v_l = xs
+        return block(h, bp, k_l, v_l), None
+
+    x, _ = jax.lax.scan(body, x, (params["decoder"], ck, cv))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed(params["embed"], x)
+
+
+def prefill(params, batch, cfg, *, cache_len: int = 0, window: int = 0,
+            dist=None, cache_dtype=jnp.bfloat16):
+    """Encoder pass + decoder pass over the prompt, returning logits AND a
+    fully populated decode cache (self-attn K/V + cross K/V)."""
+    enc_out = encode(params, batch["audio_embeds"], cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    cap = cache_len if cache_len else S
+    if window:
+        cap = min(cap, window)
+    x = L.embed(params["embed"], tokens)
+    x = x + _sinusoid(S, cfg.d_model).astype(x.dtype)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    ck, cv = _enc_kv(params, enc_out, cfg)
+
+    def body(h, xs):
+        bp, k_l, v_l = xs
+        a = L.rms_norm(h, bp["ln1"], cfg.norm_eps)
+        y, cl = attn.gqa_prefill_attention(bp["attn"], a, pos, cfg,
+                                           window=window, cap=cap,
+                                           cache_dtype=cache_dtype,
+                                           dist=dist)
+        h = h + y
+        a = L.rms_norm(h, bp["ln_x"], cfg.norm_eps)
+        h = h + _cross_attn(bp["xattn"], a, (k_l, v_l), cfg, dist=dist)
+        a = L.rms_norm(h, bp["ln2"], cfg.norm_eps)
+        return h + L.apply_mlp(bp["mlp"], a, cfg.mlp_kind), cl
+
+    x, self_caches = jax.lax.scan(body, x, (params["decoder"], ck, cv))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)
+    cache = {"layers": self_caches,
+             "cross_k": ck.astype(self_caches["k"].dtype),
+             "cross_v": cv.astype(self_caches["v"].dtype),
+             "pos": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def init_cache(cfg, batch: int, context_len: int, *, window: int = 0,
+               dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    cap = min(window, context_len) if window else context_len
+    Lc = cfg.n_layers
+    T = cfg.n_frontend_tokens
+    return {
+        "layers": {
+            "k": jnp.zeros((Lc, batch, cap, cfg.n_kv_heads, hd), dtype),
+            "v": jnp.zeros((Lc, batch, cap, cfg.n_kv_heads, hd), dtype),
+        },
+        "cross_k": jnp.zeros((Lc, batch, T, cfg.n_kv_heads, hd), dtype),
+        "cross_v": jnp.zeros((Lc, batch, T, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill_cache(params, batch, cfg, cache):
+    """Populate cross K/V from the encoder (decode starts from pos 0)."""
+    enc_out = encode(params, batch["audio_embeds"], cfg)
+    ck, cv = _enc_kv(params, enc_out, cfg)
+    cache = dict(cache)
+    cache["cross_k"] = ck.astype(cache["cross_k"].dtype)
+    cache["cross_v"] = cv.astype(cache["cross_v"].dtype)
+    return cache
+
+
+def decode_step(params, token, cache, cfg, *, window: int = 0, dist=None):
+    pos = cache["pos"]
+    B = token.shape[0]
+    x = L.embed(params["embed"], token)
+    # absolute sinusoidal position for the current step
+    d = cfg.d_model
+    i = np.arange(d // 2)
+    ang = pos.astype(jnp.float32) / (10000 ** (2 * i / d))
+    x = x + jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None].astype(x.dtype)
+
+    def body(h, xs):
+        bp, cl, ck_l, cv_l = xs
+        a = L.rms_norm(h, bp["ln1"], cfg.norm_eps)
+        y, cl = attn.gqa_decode_attention(bp["attn"], a, cl, pos, cfg, window)
+        h = h + y
+        a = L.rms_norm(h, bp["ln_x"], cfg.norm_eps)
+        h = h + _cross_attn(bp["xattn"], a, (ck_l, cv_l), cfg)
+        a = L.rms_norm(h, bp["ln2"], cfg.norm_eps)
+        return h + L.apply_mlp(bp["mlp"], a, cfg.mlp_kind), cl
+
+    x, new_layers = jax.lax.scan(
+        body, x,
+        (params["decoder"], cache["layers"], cache["cross_k"],
+         cache["cross_v"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)
+    return logits, {"layers": new_layers, "cross_k": cache["cross_k"],
+                    "cross_v": cache["cross_v"], "pos": pos + 1}

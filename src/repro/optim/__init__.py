@@ -1,0 +1,1 @@
+from .adamw import adamw, cosine_schedule, clip_by_global_norm  # noqa: F401

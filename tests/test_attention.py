@@ -1,0 +1,129 @@
+"""Blockwise (flash-style) attention, KV caches, MLA."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import attention as A
+from repro.models import layers as L
+
+
+def _qkv(rng, B=2, S=300, H=2, G=3, D=32):
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (B, S, H, G, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    return q, k, v
+
+
+@pytest.mark.parametrize("qb,kb", [(64, 48), (128, 128), (512, 1024)])
+def test_blockwise_matches_plain(rng, qb, kb):
+    q, k, v = _qkv(rng)
+    o1 = A.blockwise_attention(q, k, v, causal=True, q_block=qb, kv_block=kb)
+    o2 = A.plain_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [1, 17, 64, 299])
+def test_blockwise_window(rng, window):
+    q, k, v = _qkv(rng)
+    o1 = A.blockwise_attention(q, k, v, causal=True, window=window,
+                               q_block=64, kv_block=48)
+    o2 = A.plain_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+def test_noncausal(rng):
+    q, k, v = _qkv(rng, S=100)
+    o1 = A.blockwise_attention(q, k, v, causal=False, q_block=32, kv_block=32)
+    o2 = A.plain_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+def test_decode_cache_matches_full_attention(rng):
+    cfg = get_config("qwen2-7b").reduced()
+    from repro.models.layers import split_params
+    params, _ = split_params(A.make_gqa_params(rng, cfg))
+    B, S = 2, 20
+    x = jax.random.normal(rng, (B, S, cfg.d_model)) * 0.3
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    full = A.gqa_attention(params, x, pos, cfg, use_blockwise=False)
+    cache = A.init_kv_cache(B, S + 2, cfg.n_kv_heads, cfg.resolved_head_dim,
+                            dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        o, cache = A.gqa_decode_attention(params, x[:, t:t + 1], cache, t,
+                                          cfg)
+        outs.append(o)
+    dec = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(dec), atol=2e-5)
+
+
+def test_ring_buffer_window_decode(rng):
+    cfg = dataclasses.replace(get_config("qwen2-7b").reduced(),
+                              sliding_window=8)
+    from repro.models.layers import split_params
+    params, _ = split_params(A.make_gqa_params(rng, cfg))
+    B, S, W = 2, 24, 8
+    x = jax.random.normal(rng, (B, S, cfg.d_model)) * 0.3
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    full = A.gqa_attention(params, x, pos, cfg, window=W,
+                           use_blockwise=False)
+    cache = A.init_kv_cache(B, W, cfg.n_kv_heads, cfg.resolved_head_dim,
+                            dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        o, cache = A.gqa_decode_attention(params, x[:, t:t + 1], cache, t,
+                                          cfg, window=W)
+        outs.append(o)
+    dec = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(dec), atol=2e-5)
+
+
+def test_mla_decode_matches_prefill(rng):
+    cfg = get_config("minicpm3-4b").reduced()
+    from repro.models.layers import split_params
+    params, _ = split_params(A.make_mla_params(rng, cfg))
+    B, S = 2, 16
+    x = jax.random.normal(rng, (B, S, cfg.d_model)) * 0.3
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    full = A.mla_attention(params, x, pos, cfg)
+    cache = A.init_mla_cache(B, S, cfg, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        o, cache = A.mla_decode_attention(params, x[:, t:t + 1], cache, t,
+                                          cfg)
+        outs.append(o)
+    dec = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(dec), atol=3e-5)
+
+
+def test_mrope_sections(rng):
+    """M-RoPE with equal (t,h,w) position streams == plain RoPE."""
+    x = jax.random.normal(rng, (2, 8, 4, 32))
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    pos3 = jnp.broadcast_to(pos[None], (3, 2, 8))
+    plain = L.apply_rope(x, pos, 1e4)
+    mrope = L.apply_rope(x, pos3, 1e4, (8, 4, 4))
+    np.testing.assert_allclose(np.asarray(plain), np.asarray(mrope),
+                               atol=1e-5)
+    # different streams give different results
+    pos3b = pos3.at[1].add(5)
+    mrope_b = L.apply_rope(x, pos3b, 1e4, (8, 4, 4))
+    assert float(jnp.abs(mrope_b - mrope).max()) > 1e-3
+
+
+def test_prefill_cache_builders(rng):
+    """build_cache_from_seq ring layout must equal repeated inserts."""
+    B, S, H, D, W = 1, 13, 2, 8, 8
+    k = jax.random.normal(rng, (B, S, H, D))
+    v = jax.random.normal(jax.random.fold_in(rng, 1), (B, S, H, D))
+    built = A.build_cache_from_seq(k, v, W, window=W, dtype=jnp.float32)
+    cache = A.init_kv_cache(B, W, H, D, dtype=jnp.float32)
+    for t in range(S):
+        cache = A.kv_cache_insert(cache, k[:, t:t + 1], v[:, t:t + 1], t, W)
+    np.testing.assert_allclose(np.asarray(built["k"]), np.asarray(cache["k"]),
+                               atol=1e-6)

@@ -1,0 +1,69 @@
+"""Distributed behaviour (shard_map S-ETP/ETP, load-aware EP, dry-run) via
+subprocesses that set --xla_force_host_platform_device_count=8 BEFORE jax
+imports. The main pytest process keeps its single real device."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+PROGS = os.path.join(ROOT, "tests", "dist_progs")
+
+
+def run_prog(name, *args, devices=8, timeout=420):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    p = subprocess.run([sys.executable, os.path.join(PROGS, name), *args],
+                       capture_output=True, text=True, env=env,
+                       timeout=timeout)
+    assert p.returncode == 0, f"{name} failed:\n{p.stdout}\n{p.stderr}"
+    return p.stdout
+
+
+def test_setp_exactness():
+    out = run_prog("setp_check.py")
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["plain_err"] < 1e-5
+    assert res["dualsparse_keepall_err"] < 1e-5
+    assert res["etp_err"] < 1e-5
+    assert res["load_aware_finite"]
+
+
+def test_setp_uses_only_all_to_all():
+    """Paper §3.3: S-ETP's MoE communication is AlltoAll only, while ETP
+    additionally pays AllGather + ReduceScatter."""
+    out = run_prog("collective_pattern.py")
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["setp"].get("all-to-all", 0) > 0
+    assert res["setp"].get("all-gather", 0) == 0
+    assert res["setp"].get("reduce-scatter", 0) == 0
+    assert res["etp"].get("all-gather", 0) > 0
+    assert res["etp"].get("reduce-scatter", 0) > 0
+    assert res["setp_bytes"] < res["etp_bytes"]
+
+
+def test_dryrun_micro():
+    """dryrun machinery end-to-end on an 8-device mesh (fast micro check
+    that lowering+compile+analysis all work in one process)."""
+    out = run_prog("dryrun_micro.py")
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["status"] == "ok"
+    assert res["flops"] > 0
+    assert res["collective_bytes"] > 0
+
+
+def test_distributed_train_step_runs():
+    out = run_prog("train_dist_check.py")
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["loss_finite"]
+    assert res["loss1"] < res["loss0"] * 1.2  # it trains (or at least moves)
+
+
+def test_distributed_dualsparse_serving():
+    """Engine + S-ETP + 2T-Drop + load-aware thresholding on 8 devices."""
+    out = run_prog("serve_dist_check.py")
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["ok"], res

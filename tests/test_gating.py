@@ -1,0 +1,50 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gating
+
+
+def test_topk_routing_selects_highest(rng):
+    logits = jax.random.normal(rng, (32, 16))
+    r = gating.top_k_routing(logits, 4, renorm=True)
+    probs = jax.nn.softmax(logits, -1)
+    top = jnp.sort(probs, axis=-1)[:, -4:]
+    np.testing.assert_allclose(np.sort(np.asarray(
+        jnp.take_along_axis(probs, r.idx, 1)), axis=-1), np.asarray(top),
+        rtol=1e-6)
+
+
+def test_normalized_scores_sum_to_one(rng):
+    logits = jax.random.normal(rng, (64, 32)) * 3
+    r = gating.top_k_routing(logits, 8, renorm=False)
+    np.testing.assert_allclose(np.asarray(r.norm_score.sum(-1)), 1.0,
+                               rtol=1e-5)
+    # combine weights are the raw softmax scores when renorm=False
+    assert float(r.combine.sum(-1).max()) <= 1.0 + 1e-5
+
+
+def test_renorm_combine_equals_norm_score(rng):
+    logits = jax.random.normal(rng, (16, 8))
+    r = gating.top_k_routing(logits, 2, renorm=True)
+    np.testing.assert_array_equal(np.asarray(r.combine),
+                                  np.asarray(r.norm_score))
+
+
+def test_expert_histogram_counts(rng):
+    idx = jnp.array([[0, 1], [1, 2], [1, 3]])
+    hist = gating.expert_histogram(idx, 4)
+    np.testing.assert_array_equal(np.asarray(hist), [1, 3, 1, 1])
+    keep = jnp.array([[True, False], [True, True], [False, True]])
+    # kept pairs: (0,e0), (1,e1), (1,e2), (2,e3)
+    hist = gating.expert_histogram(idx, 4, keep=keep)
+    np.testing.assert_array_equal(np.asarray(hist), [1, 1, 1, 1])
+
+
+def test_aux_loss_uniform_is_one(rng):
+    # perfectly uniform routing -> loss == n_experts * E[1/E * 1/E] * E = 1
+    T, E, K = 1024, 8, 1
+    probs = jnp.full((T, E), 1.0 / E)
+    idx = jnp.tile(jnp.arange(E), T // E + 1)[:T][:, None]
+    loss = gating.load_balance_aux_loss(probs, idx, E)
+    np.testing.assert_allclose(float(loss), 1.0, rtol=1e-5)

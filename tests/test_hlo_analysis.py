@@ -1,0 +1,47 @@
+"""The HLO text cost model: trip-count scaling, dot flops, collectives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import (analyze_hlo, shape_elems_bytes,
+                                       roofline_terms)
+
+
+def test_shape_parse():
+    e, b = shape_elems_bytes("bf16[2,16,128]")
+    assert (e, b) == (2 * 16 * 128, 2 * 16 * 128 * 2)
+    e, b = shape_elems_bytes("(f32[4,4], s32[8])")
+    assert b == 4 * 4 * 4 + 8 * 4
+
+
+def test_scan_flops_scaled_by_trip_count():
+    def f(x, w):
+        def body(h, wi):
+            return h @ wi, None
+        h, _ = jax.lax.scan(body, x, w)
+        return h
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((10, 128, 128), jnp.float32)
+    comp = jax.jit(f).lower(x, w).compile()
+    c = analyze_hlo(comp.as_text())
+    want = 10 * 2 * 128 ** 3
+    assert abs(c.flops - want) / want < 0.05, (c.flops, want)
+
+
+def test_plain_matmul_flops():
+    f = lambda a, b: a @ b
+    a = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    b = jax.ShapeDtypeStruct((32, 16), jnp.float32)
+    comp = jax.jit(f).lower(a, b).compile()
+    c = analyze_hlo(comp.as_text())
+    assert abs(c.flops - 2 * 64 * 32 * 16) / (2 * 64 * 32 * 16) < 0.01
+
+
+def test_roofline_terms():
+    t = roofline_terms(197e12, 819e9, 200e9, 1, peak_flops=197e12,
+                       hbm_bw=819e9, ici_bw=50e9)
+    assert abs(t["t_compute"] - 1.0) < 1e-9
+    assert abs(t["t_memory"] - 1.0) < 1e-9
+    assert abs(t["t_collective"] - 1.0) < 1e-9

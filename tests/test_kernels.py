@@ -1,0 +1,108 @@
+"""Pallas dualsparse FFN kernel vs the pure-jnp oracle, across a
+shape/dtype/block sweep (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SWEEP = [
+    # (E, C, d, f, block_c, block_f, dtype)
+    (4, 64, 128, 256, 32, 64, jnp.float32),
+    (2, 100, 96, 160, 32, 32, jnp.float32),     # f/2 not block-aligned
+    (3, 128, 128, 256, 128, 128, jnp.bfloat16),
+    (1, 7, 64, 96, 8, 16, jnp.float32),         # tiny, padding everywhere
+    (8, 33, 64, 128, 16, 64, jnp.float32),      # C not block-aligned
+]
+
+
+def _mk(key, E, C, d, f, dtype):
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (E, C, d), dtype) * 0.5
+    w1 = jax.random.normal(ks[1], (E, d, f), dtype) * 0.1
+    w3 = jax.random.normal(ks[2], (E, d, f), dtype) * 0.1
+    w2 = jax.random.normal(ks[3], (E, f, d), dtype) * 0.1
+    cf = jax.random.randint(ks[4], (E,), 0, C // 2 + 1)
+    cm = jax.random.randint(ks[5], (E,), 0, C // 2 + 1)
+    return x, w1, w3, w2, cf, cm
+
+
+@pytest.mark.parametrize("E,C,d,f,bc,bf,dtype", SWEEP)
+def test_kernel_matches_oracle(rng, E, C, d, f, bc, bf, dtype):
+    x, w1, w3, w2, cf, cm = _mk(rng, E, C, d, f, dtype)
+    got = ops.grouped_swiglu(x, w1, w3, w2, cf, cm, block_c=bc, block_f=bf)
+    want = ref.grouped_swiglu_ref(x, w1, w3, w2, cf, cm)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("E,C,d,f,bc,bf,dtype", SWEEP[:3])
+def test_kernel_full_counts(rng, E, C, d, f, bc, bf, dtype):
+    x, w1, w3, w2, _, _ = _mk(rng, E, C, d, f, dtype)
+    got = ops.grouped_swiglu(x, w1, w3, w2, block_c=bc, block_f=bf)
+    want = ref.grouped_swiglu_ref(x, w1, w3, w2)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+def test_kernel_zero_counts_zero_output(rng):
+    x, w1, w3, w2, _, _ = _mk(rng, 2, 32, 64, 128, jnp.float32)
+    z = jnp.zeros((2,), jnp.int32)
+    got = ops.grouped_swiglu(x, w1, w3, w2, z, z)
+    assert float(jnp.abs(got).max()) == 0.0
+
+
+def test_kernel_major_half_only(rng):
+    """counts_major rows use ONLY the first f/2 neurons."""
+    E, C, d, f = 2, 16, 64, 128
+    x, w1, w3, w2, _, _ = _mk(rng, E, C, d, f, jnp.float32)
+    cf = jnp.zeros((E,), jnp.int32)
+    cm = jnp.full((E,), C, jnp.int32)
+    got = ops.grouped_swiglu(x, w1, w3, w2, cf, cm)
+    # oracle: zero out minor neurons entirely
+    w1m = w1.at[:, :, f // 2:].set(0.0)
+    w3m = w3.at[:, :, f // 2:].set(0.0)
+    want = ref.grouped_swiglu_ref(x, w1m, w3m, w2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD intra-chunk kernel (kernels/ssd_chunk.py)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.ssd_chunk import ssd_chunk_pallas, ssd_chunk_ref
+from repro.models import mamba2 as mm
+
+
+@pytest.mark.parametrize("BH,nc,Q,P,N", [(3, 4, 32, 16, 8),
+                                         (2, 2, 128, 64, 128),
+                                         (1, 5, 16, 8, 8)])
+def test_ssd_chunk_kernel_matches_oracle(rng, BH, nc, Q, P, N):
+    ks = jax.random.split(rng, 5)
+    x = jax.random.normal(ks[0], (BH, nc, Q, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (BH, nc, Q)))
+    a = -jnp.exp(jax.random.normal(ks[2], (BH,)) * 0.5)
+    bm = jax.random.normal(ks[3], (BH, nc, Q, N))
+    cm = jax.random.normal(ks[4], (BH, nc, Q, N))
+    y1, s1, d1 = ssd_chunk_pallas(x, dt, a, bm, cm)
+    y2, s2, d2 = ssd_chunk_ref(x, dt, a, bm, cm)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), atol=1e-6)
+
+
+def test_ssd_kernel_full_path_matches_sequential(rng):
+    ks = jax.random.split(rng, 5)
+    b, S, H, P, G, N = 2, 100, 4, 16, 2, 8
+    x = jax.random.normal(ks[0], (b, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    B = jax.random.normal(ks[3], (b, S, G, N))
+    C = jax.random.normal(ks[4], (b, S, G, N))
+    y1, h1 = mm.ssd_chunked_kernel(x, dt, A, B, C, chunk=32)
+    y2, h2 = mm.ssd_reference(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=2e-4)

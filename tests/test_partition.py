@@ -1,0 +1,95 @@
+"""Paper §3: expert partition preserves the MoE function exactly
+(Eq. 11 complete, Eq. 13 partial)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import drop, gating, moe, partition
+
+
+def _ref(params, x, cfg, **kw):
+    return moe.moe_forward_ref(params, x, cfg, **kw)
+
+
+@pytest.mark.parametrize("p", [2, 4, 8])
+def test_complete_transform_exact(rng, moe_cfg, moe_params, p):
+    x = jax.random.normal(jax.random.fold_in(rng, p), (48, moe_cfg.d_model))
+    y0 = _ref(moe_params, x, moe_cfg)
+    pc = partition.complete_transform(moe_params, p)
+    cfg_p = dataclasses.replace(moe_cfg, n_experts=moe_cfg.n_experts * p,
+                                top_k=moe_cfg.top_k * p,
+                                d_expert=moe_cfg.d_expert // p)
+    yc = _ref(pc, x, cfg_p)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(yc), atol=1e-5)
+
+
+def test_complete_transform_gating_scores(rng, moe_cfg, moe_params):
+    """Eq. 9: each partitioned copy carries exactly 1/P of the original
+    softmax score, and copies of one expert tie."""
+    p = 4
+    x = jax.random.normal(rng, (8, moe_cfg.d_model))
+    s0 = jax.nn.softmax(gating.gate_logits(x, moe_params["wg"]), -1)
+    pc = partition.complete_transform(moe_params, p)
+    sp = jax.nn.softmax(gating.gate_logits(x, pc["wg"]), -1)
+    got = np.asarray(sp.reshape(8, -1, p))
+    want = np.broadcast_to(np.asarray(s0[..., None] / p), got.shape)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-9)
+
+
+@pytest.mark.parametrize("p", [2, 4])
+def test_partial_transform_exact(rng, moe_cfg, moe_params, p):
+    x = jax.random.normal(jax.random.fold_in(rng, 10 + p),
+                          (48, moe_cfg.d_model))
+    y0 = _ref(moe_params, x, moe_cfg)
+    pp = partition.partial_transform(moe_params, p)
+    r = gating.route(x, moe_params["wg"], moe_cfg.top_k,
+                     moe_cfg.router_norm_topk)
+    pairs = drop.expand_pairs_2t(r.idx, r.combine, r.norm_score, p,
+                                 -1.0, -1.0)   # keep everything
+    yp = _ref(pp, x, moe_cfg, pairs=pairs)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(yp), atol=1e-5)
+
+
+def test_partial_transform_index_remap(rng, moe_cfg):
+    """Eq. 12: sub-expert ids are i*P + p, contiguous per original expert."""
+    idx = jnp.array([[3, 7]])
+    combine = jnp.ones((1, 2))
+    score = jnp.full((1, 2), 0.5)
+    pairs = drop.expand_pairs_2t(idx, combine, score, 2, -1.0, -1.0)
+    assert sorted(np.asarray(pairs.idx[0]).tolist()) == [6, 7, 14, 15]
+
+
+def test_partial_roundtrip(moe_params):
+    pp = partition.partial_transform(moe_params, 4)
+    back = partition.invert_partial(pp, 4)
+    for k in ("w1", "w3", "w2"):
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(moe_params[k]))
+
+
+def test_dense_ffn_partition_exact(rng):
+    d, f, p = 32, 64, 4
+    ks = jax.random.split(rng, 4)
+    w1 = jax.random.normal(ks[0], (d, f))
+    w3 = jax.random.normal(ks[1], (d, f))
+    w2 = jax.random.normal(ks[2], (f, d))
+    x = jax.random.normal(ks[3], (16, d))
+    from repro.models.layers import swiglu
+    y0 = swiglu(x, w1, w3, w2)
+    w1p, w3p, w2p = partition.dense_ffn_partition(w1, w3, w2, p)
+    y = sum(swiglu(x, w1p[i], w3p[i], w2p[i]) for i in range(p))
+    # unit-scale weights -> outputs O(100); f32 summation-order noise ~1e-4
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y), rtol=2e-5,
+                               atol=1e-3)
+
+
+def test_w2_scaling_factor(moe_params):
+    """Complete transformation scales W2 by exactly P (paper's choice (2))."""
+    p = 2
+    pc = partition.complete_transform(moe_params, p)
+    pp = partition.partial_transform(moe_params, p)
+    np.testing.assert_allclose(np.asarray(pc["w2"]), np.asarray(pp["w2"]) * p,
+                               rtol=1e-6)

@@ -1,0 +1,66 @@
+"""Beyond-paper: per-layer threshold calibration (paper §5.3.3 future work)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import drop, gating, moe
+from repro.data import pipeline
+from repro.models import model as M
+
+
+def test_calibrate_threshold_hits_target(rng):
+    scores = jax.random.uniform(rng, (4096, 8))
+    for target in (0.1, 0.25, 0.5):
+        t = drop.calibrate_threshold(scores, target)
+        got = float(jnp.mean(scores <= t))
+        assert abs(got - target) < 0.02
+
+
+def test_per_layer_thresholds_equalize_drop(rng):
+    """A single global threshold gives wildly different per-layer drop rates
+    (Fig 12); calibrated per-layer thresholds equalize them."""
+    cfg = get_config("olmoe-lite")
+    key = rng
+    # synthetic per-layer score distributions with different spreads
+    layer_scores = [jax.random.beta(jax.random.fold_in(key, i),
+                                    2.0, 2.0 + 3 * i, (2048, 8))
+                    for i in range(4)]
+    target = 0.25
+    ts = drop.calibrate_per_layer_thresholds(layer_scores, target)
+    assert ts.shape == (4, 2)
+    for s, (tm, tn) in zip(layer_scores, ts):
+        t1 = (tm + tn) / 2
+        rate = float(jnp.mean(s <= t1))
+        assert abs(rate - target) < 0.03
+    # while the single global threshold misses badly on at least one layer
+    t_global = drop.calibrate_threshold(jnp.concatenate(
+        [s.reshape(-1) for s in layer_scores]), target)
+    rates = [float(jnp.mean(s <= t_global)) for s in layer_scores]
+    assert max(abs(r - target) for r in rates) > 0.05
+
+
+def test_transform_with_target_drop_rate(rng):
+    cfg = get_config("olmoe-lite")
+    params = M.init_params(rng, cfg)
+    calib = pipeline.calibration_activations(jax.random.fold_in(rng, 1),
+                                             512, cfg.d_model)
+    tparams = M.transform_params_for_dualsparse(params, cfg, calib,
+                                                target_drop_rate=0.25)
+    th = tparams["blocks"]["moe"]["thresholds"]
+    assert th.shape == (cfg.n_layers, 2)
+    assert bool((th[:, 1] >= th[:, 0]).all())
+    # the routed drop rate per layer is near the target
+    for layer in range(cfg.n_layers):
+        moe_p = jax.tree.map(lambda a: a[layer], tparams["blocks"]["moe"])
+        pairs = moe.route_dualsparse(moe_p, calib, cfg)
+        fs = float(drop.flops_saved_fraction(pairs.modes))
+        assert abs(fs - 0.25) < 0.08, (layer, fs)
+    # and the model still runs end to end with the stored thresholds
+    from repro.models.transformer import DistContext
+    from repro.launch.mesh import make_host_mesh
+    dist = DistContext(mesh=make_host_mesh(1), moe_impl="dispatch",
+                       dualsparse=True)
+    batch = M.make_batch(rng, cfg, 2, 16, "train")
+    loss = M.loss_fn(tparams, batch, cfg, dist=dist)
+    assert bool(jnp.isfinite(loss))

@@ -1,0 +1,121 @@
+"""Hypothesis property-based tests on the system's invariants."""
+import dataclasses
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import drop, gating, load_aware, moe, partition
+from repro.models.layers import split_params
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=20,
+    suppress_health_check=list(hypothesis.HealthCheck))
+hypothesis.settings.load_profile("ci")
+
+
+@st.composite
+def moe_shapes(draw):
+    d = draw(st.sampled_from([16, 32, 48]))
+    e = draw(st.sampled_from([4, 8, 16]))
+    f = draw(st.sampled_from([8, 16, 32]))
+    k = draw(st.integers(1, min(4, e)))
+    p = draw(st.sampled_from([2, 4]))
+    seed = draw(st.integers(0, 2 ** 16))
+    renorm = draw(st.booleans())
+    return d, e, f, k, p, seed, renorm
+
+
+def _make(d, e, f, seed):
+    from repro.configs.base import ModelConfig
+    cfg = ModelConfig(arch_id="prop", family="moe", source="", n_layers=1,
+                      d_model=d, n_heads=2, n_kv_heads=2, d_ff=f,
+                      vocab_size=64, n_experts=e, top_k=1, d_expert=f)
+    key = jax.random.PRNGKey(seed)
+    params, _ = split_params(moe.make_moe_params(key, cfg))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (24, d)) * 0.5
+    return cfg, params, x
+
+
+@given(moe_shapes())
+def test_complete_transform_invariant(shapes):
+    """∀ (shapes, P): complete transformation preserves outputs (Eq. 11)."""
+    d, e, f, k, p, seed, renorm = shapes
+    cfg, params, x = _make(d, e, f, seed)
+    cfg = dataclasses.replace(cfg, top_k=k, router_norm_topk=renorm)
+    y0 = moe.moe_forward_ref(params, x, cfg)
+    pc = partition.complete_transform(params, p)
+    cfg_p = dataclasses.replace(cfg, n_experts=e * p, top_k=k * p,
+                                d_expert=f // p)
+    yc = moe.moe_forward_ref(pc, x, cfg_p)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(yc), atol=1e-4)
+
+
+@given(moe_shapes())
+def test_partial_transform_invariant(shapes):
+    """∀ (shapes, P): partial transformation + Eq. 12 routing expansion
+    preserves outputs (Eq. 13)."""
+    d, e, f, k, p, seed, renorm = shapes
+    cfg, params, x = _make(d, e, f, seed)
+    cfg = dataclasses.replace(cfg, top_k=k, router_norm_topk=renorm)
+    y0 = moe.moe_forward_ref(params, x, cfg)
+    pp = partition.partial_transform(params, p)
+    r = gating.route(x, params["wg"], k, renorm)
+    pairs = drop.expand_pairs_2t(r.idx, r.combine, r.norm_score, p, -1., -1.)
+    yp = moe.moe_forward_ref(pp, x, cfg, pairs=pairs)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(yp), atol=1e-4)
+
+
+@given(st.integers(0, 2 ** 16),
+       st.floats(0.0, 0.5), st.floats(0.0, 0.4))
+def test_two_t_keep_monotone(seed, t_major, gap):
+    """Raising either threshold can only drop MORE pairs, and the kept set
+    of 2T at (t, t) equals 1T at t."""
+    t_minor = t_major + gap
+    key = jax.random.PRNGKey(seed)
+    s = jax.random.uniform(key, (64, 4))
+    idx = jax.random.randint(jax.random.fold_in(key, 1), (64, 4), 0, 8)
+    c = jnp.ones((64, 4))
+    p1 = drop.expand_pairs_2t(idx, c, s, 2, t_major, t_minor)
+    p2 = drop.expand_pairs_2t(idx, c, s, 2, t_major + 0.05, t_minor + 0.05)
+    assert bool((p2.keep <= p1.keep).all())
+
+
+@given(st.integers(0, 2 ** 16), st.integers(2, 8),
+       st.floats(0.01, 0.5))
+def test_load_aware_threshold_bounds(seed, n_dev, t_max):
+    """Step-down thresholds are in [0, t_max] and increase with load."""
+    loads = jax.random.uniform(jax.random.PRNGKey(seed), (n_dev,),
+                               minval=0.0, maxval=100.0)
+    t = load_aware.step_down_thresholds(loads, t_max)
+    assert float(t.min()) >= 0.0 and float(t.max()) <= t_max + 1e-6
+    order = jnp.argsort(loads)
+    ts = np.asarray(t)[np.asarray(order)]
+    assert np.all(np.diff(ts) >= -1e-6)
+
+
+@given(st.integers(0, 2 ** 16))
+def test_dispatch_agrees_with_ref_property(seed):
+    cfg, params, x = _make(32, 8, 16, seed)
+    cfg = dataclasses.replace(cfg, top_k=2)
+    y0 = moe.moe_forward_ref(params, x, cfg)
+    y1 = moe.moe_forward_dispatch(params, x, cfg, capacity_factor=8.0)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=1e-4)
+
+
+@given(st.integers(0, 2 ** 16), st.floats(0.0, 0.3))
+def test_drop_rate_flops_proportionality(seed, t1):
+    """Paper Fig 10: the fraction of dropped token-(sub)expert computations
+    equals the fraction of expert FLOPs saved (tensor-granular dropping)."""
+    key = jax.random.PRNGKey(seed)
+    s = jax.random.uniform(key, (128, 4))
+    s = s / s.sum(-1, keepdims=True)
+    idx = jax.random.randint(jax.random.fold_in(key, 1), (128, 4), 0, 8)
+    c = jnp.ones((128, 4))
+    pairs = drop.expand_pairs_2t(idx, c, s, 2, t1 - 0.01, t1 + 0.01)
+    dr = float(drop.drop_rate(pairs))
+    fs = float(drop.flops_saved_fraction(pairs.modes))
+    assert abs(dr - fs) < 1e-5
