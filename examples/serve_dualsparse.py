@@ -1,6 +1,7 @@
-"""Batched serving with the DualSparse-MoE inference system (paper §4-§5.3):
-2000-prompt style throughput run (scaled down for CPU) comparing baseline
-vs 2T-Drop serving.
+"""Serving with the DualSparse-MoE inference system (paper §4-§5.3):
+throughput run (scaled down for CPU) comparing baseline vs 2T-Drop serving,
+on both the synchronized-batch engine and the continuous-batching engine
+(mixed-length requests admitted into slots as they free up).
 
     PYTHONPATH=src python examples/serve_dualsparse.py --requests 8
 """
@@ -19,7 +20,8 @@ from repro.data.pipeline import SyntheticLM, calibration_activations
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
 from repro.models.transformer import DistContext
-from repro.serving import GenerationConfig, ServingEngine
+from repro.serving import (ContinuousBatchingEngine, GenerationConfig,
+                           ServingEngine)
 
 
 def main():
@@ -28,6 +30,7 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=50)
     ap.add_argument("--new-tokens", type=int, default=10)
+    ap.add_argument("--slots", type=int, default=4)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -49,7 +52,7 @@ def main():
                              max_prompt_len=args.prompt_len,
                              max_new_tokens=args.new_tokens)
     base_tps, base_res = throughput(base_eng)
-    print(f"baseline        : {base_tps:.1f} tok/s")
+    print(f"baseline (sync)  : {base_tps:.1f} tok/s")
 
     calib = calibration_activations(jax.random.fold_in(key, 7), 512,
                                     cfg.d_model)
@@ -60,13 +63,24 @@ def main():
                            max_prompt_len=args.prompt_len,
                            max_new_tokens=args.new_tokens, dist=dist)
     ds_tps, ds_res = throughput(ds_eng)
-    print(f"DualSparse 2T   : {ds_tps:.1f} tok/s "
+    print(f"DualSparse 2T    : {ds_tps:.1f} tok/s "
           f"(T²=({cfg.dualsparse.t_major}, {cfg.dualsparse.t_minor}))")
 
     agree = np.mean([a.tokens == b.tokens
                      for a, b in zip(base_res, ds_res)])
     print(f"greedy outputs identical on {agree:.0%} of requests "
           "(drop perturbs low-score experts only)")
+
+    # continuous batching: same DualSparse DistContext threads through the
+    # per-slot decode path unchanged; requests flow through a small slot pool
+    cont_eng = ContinuousBatchingEngine(
+        cfg, tparams, n_slots=args.slots, max_prompt_len=args.prompt_len,
+        max_new_tokens=args.new_tokens, dist=dist)
+    cont_tps, cont_res = throughput(cont_eng)
+    print(f"DualSparse 2T + continuous batching ({args.slots} slots): "
+          f"{cont_tps:.1f} tok/s — admitted {cont_eng.n_admitted} requests "
+          f"over {cont_eng.decode_steps} decode steps, "
+          f"{cont_eng.decode_traces} decode trace(s)")
 
 
 if __name__ == "__main__":

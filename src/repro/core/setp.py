@@ -22,7 +22,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+try:  # jax >= 0.6: top-level jax.shard_map (replication check kw: check_vma)
+    from jax import shard_map as _shard_map_impl
+    _REP_CHECK_KW = "check_vma"
+except ImportError:  # older jax: experimental namespace (kw: check_rep)
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+    _REP_CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+    """Version-tolerant shard_map: same call-sites work on old and new JAX."""
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs,
+                           **{_REP_CHECK_KW: check_vma})
 
 from . import gating, moe as moe_mod
 from .drop import MODE_DROP, MODE_FULL, MODE_MAJOR, SubExpertPairs, drop_rate

@@ -157,7 +157,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         jitted = jax.jit(step, in_shardings=shardings,
                          donate_argnums=tuple(range(len(args))) if donate
                          and shape.kind != "prefill" else ())
-        with jax.set_mesh(mesh):
+        with mesh_mod.use_mesh(mesh):
             lowered = jitted.lower(*args)
             compiled = lowered.compile()
         rec["compile_s"] = round(time.time() - t0, 1)

@@ -1,8 +1,10 @@
-"""Serving driver: batched requests through the DualSparse-MoE engine.
+"""Serving driver: requests through the DualSparse-MoE serving engines.
 
 Example (CPU, reduced config):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-moe-30b-a3b \
       --reduced --requests 8 --prompt-len 64 --new-tokens 32 --dualsparse
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-moe-30b-a3b \
+      --reduced --engine continuous --slots 4 --requests 8
 """
 from __future__ import annotations
 
@@ -16,17 +18,25 @@ import numpy as np
 from repro.configs import get_config, list_archs
 from repro.data.pipeline import SyntheticLM, calibration_activations
 from repro.models import model as M
-from repro.serving import GenerationConfig, ServingEngine
+from repro.serving import (ContinuousBatchingEngine, GenerationConfig,
+                           ServingEngine)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-moe-30b-a3b", choices=list_archs())
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--engine", default="sync",
+                    choices=("sync", "continuous"),
+                    help="synchronized batches vs slot-based continuous "
+                         "batching with mid-decode admission")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=32)
-    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--batch-size", type=int, default=8,
+                    help="sync batch size / continuous slot count")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="continuous engine slot count (0 = --batch-size)")
     ap.add_argument("--dualsparse", action="store_true",
                     help="apply §4.2 partition+reconstruction+2T-Drop")
     ap.add_argument("--seed", type=int, default=0)
@@ -57,9 +67,15 @@ def main():
         jax.random.fold_in(key, i), 1, args.prompt_len)["tokens"][0])
         for i in range(args.requests)]
 
-    eng = ServingEngine(cfg, params, batch_size=args.batch_size,
-                        max_prompt_len=args.prompt_len,
-                        max_new_tokens=args.new_tokens, dist=dist)
+    if args.engine == "continuous":
+        eng = ContinuousBatchingEngine(
+            cfg, params, n_slots=args.slots or args.batch_size,
+            max_prompt_len=args.prompt_len, max_new_tokens=args.new_tokens,
+            dist=dist)
+    else:
+        eng = ServingEngine(cfg, params, batch_size=args.batch_size,
+                            max_prompt_len=args.prompt_len,
+                            max_new_tokens=args.new_tokens, dist=dist)
     t0 = time.time()
     results = eng.generate(prompts, GenerationConfig(
         max_new_tokens=args.new_tokens, seed=args.seed))
@@ -67,6 +83,12 @@ def main():
     n_tok = sum(len(r.tokens) for r in results)
     print(f"served {len(results)} requests, {n_tok} tokens "
           f"in {dt:.2f}s ({n_tok / dt:.1f} tok/s)")
+    if args.engine == "continuous":
+        print(f"  slots={eng.n_slots} admitted={eng.n_admitted} "
+              f"decode_steps={eng.decode_steps} "
+              f"max_concurrency={eng.max_concurrency} "
+              f"traces(prefill={eng.prefill_traces}, "
+              f"decode={eng.decode_traces})")
     for r in results[:4]:
         print(f"  req{r.uid}: {r.tokens[:12]}...")
 

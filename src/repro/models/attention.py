@@ -265,21 +265,37 @@ def _cache_slot(pos, capacity: int, window: int):
 
 def _cache_validity(pos_after, capacity: int, window: int):
     """Validity mask + absolute positions of cache slots after inserting the
-    token at position pos_after-1 (ring buffer when windowed)."""
+    token at position pos_after-1 (ring buffer when windowed).
+
+    ``pos_after`` may be a scalar (synchronized batch) or a (B,) vector of
+    per-slot positions (continuous batching) — the vector form broadcasts to
+    a (B, capacity) mask so each slot sees only its own ragged prefix."""
     slots = jnp.arange(capacity)
+    if jnp.ndim(pos_after) == 1:
+        pos_after = pos_after[:, None]                       # (B, 1)
     if window > 0:
         abs_pos = pos_after - 1 - ((pos_after - 1 - slots) % capacity)
         valid = (abs_pos >= 0) & (abs_pos > pos_after - 1 - window)
     else:
-        abs_pos = slots
+        abs_pos = jnp.broadcast_to(slots, jnp.broadcast_shapes(
+            jnp.shape(pos_after), slots.shape))
         valid = slots < pos_after
     return valid, abs_pos
 
 
 def kv_cache_insert(cache, k_new, v_new, pos, window: int = 0):
-    """Insert one step (B,1,Hkv,D) at absolute position pos."""
+    """Insert one step (B,1,Hkv,D) at absolute position ``pos`` — a scalar
+    (whole batch at one position) or a (B,) vector of per-slot ragged
+    positions (out-of-capacity writes are dropped)."""
     cap = cache["k"].shape[1]
     idx = _cache_slot(pos, cap, window)
+    if jnp.ndim(pos) == 1:
+        b = jnp.arange(k_new.shape[0])
+        k = cache["k"].at[b, idx].set(k_new[:, 0].astype(cache["k"].dtype),
+                                      mode="drop")
+        v = cache["v"].at[b, idx].set(v_new[:, 0].astype(cache["v"].dtype),
+                                      mode="drop")
+        return {"k": k, "v": v}
     k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
                                      (0, idx, 0, 0))
     v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
@@ -287,11 +303,21 @@ def kv_cache_insert(cache, k_new, v_new, pos, window: int = 0):
     return {"k": k, "v": v}
 
 
+def _valid_mask(valid, rank: int):
+    """(cap,) or (B,cap) validity -> mask broadcastable against a score
+    tensor of ``rank`` dims whose first axis is batch and last is the cache
+    axis (shared by the GQA and MLA decode paths)."""
+    lead = valid.shape[:1] if valid.ndim == 2 else (1,)
+    return valid.reshape(lead + (1,) * (rank - 2) + valid.shape[-1:])
+
+
 def gqa_decode_attention(params, x, cache, pos, cfg, window: int = 0):
     """One-token decode: x (B,1,d) against the cache at absolute position
-    ``pos`` (scalar). Returns (out, new_cache)."""
+    ``pos`` — a scalar, or a (B,) vector of per-slot positions (continuous
+    batching over ragged requests). Returns (out, new_cache)."""
     B = x.shape[0]
-    posb = jnp.full((B, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    posb = pos[:, None] if pos.ndim == 1 else jnp.full((B, 1), pos, jnp.int32)
     if cfg.mrope_sections:
         posb = jnp.broadcast_to(posb[None], (3,) + posb.shape)
     q, k_new, v_new = gqa_project_qkv(params, x, posb, cfg)
@@ -300,7 +326,7 @@ def gqa_decode_attention(params, x, cache, pos, cfg, window: int = 0):
     scale = 1.0 / np.sqrt(q.shape[-1])
     s = jnp.einsum("bqhgk,bthk->bqhgt", q, cache["k"],
                    preferred_element_type=jnp.float32) * scale
-    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    s = jnp.where(_valid_mask(valid, s.ndim), s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1).astype(cache["v"].dtype)
     o = jnp.einsum("bqhgt,bthk->bqhgk", p, cache["v"])
     return jnp.einsum("bshgk,hgkd->bsd", o, params["wo"]), cache
@@ -408,19 +434,29 @@ def mla_decode_attention(params, x, cache, pos, cfg, window: int = 0):
 
     q_nope is absorbed through wk_b into latent space so attention scores are
     computed directly against c_kv (rank-space) — the TPU-efficient MLA decode.
+    ``pos`` may be a scalar or a (B,) per-slot vector (continuous batching).
     """
     B = x.shape[0]
-    posb = jnp.full((B, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1
+    posb = pos[:, None] if per_slot else jnp.full((B, 1), pos, jnp.int32)
     q_nope, q_rope = mla_queries(params, x, posb, cfg)       # (B,1,H,dn/dr)
     c_new, kr_new = mla_project_latent(params, x, cfg)       # (B,1,rkv/dr)
     kr_new = layers.apply_rope(kr_new[..., None, :], posb,
                                cfg.rope_theta)[..., 0, :]
     cap = cache["c"].shape[1]
     idx = _cache_slot(pos, cap, window)
-    c_kv = jax.lax.dynamic_update_slice(
-        cache["c"], c_new.astype(cache["c"].dtype), (0, idx, 0))
-    k_rope = jax.lax.dynamic_update_slice(
-        cache["kr"], kr_new.astype(cache["kr"].dtype), (0, idx, 0))
+    if per_slot:
+        b = jnp.arange(B)
+        c_kv = cache["c"].at[b, idx].set(
+            c_new[:, 0].astype(cache["c"].dtype), mode="drop")
+        k_rope = cache["kr"].at[b, idx].set(
+            kr_new[:, 0].astype(cache["kr"].dtype), mode="drop")
+    else:
+        c_kv = jax.lax.dynamic_update_slice(
+            cache["c"], c_new.astype(cache["c"].dtype), (0, idx, 0))
+        k_rope = jax.lax.dynamic_update_slice(
+            cache["kr"], kr_new.astype(cache["kr"].dtype), (0, idx, 0))
     cache = {"c": c_kv, "kr": k_rope}
     valid, _ = _cache_validity(pos + 1, cap, window)
     # absorb: q_eff (B,1,H,rkv)
@@ -430,7 +466,7 @@ def mla_decode_attention(params, x, cache, pos, cfg, window: int = 0):
                     preferred_element_type=jnp.float32)
          + jnp.einsum("bshk,btk->bsht", q_rope, k_rope,
                       preferred_element_type=jnp.float32)) * scale
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    s = jnp.where(_valid_mask(valid, s.ndim), s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1).astype(c_kv.dtype)
     o_lat = jnp.einsum("bsht,btr->bshr", p, c_kv)            # (B,1,H,rkv)
     o = jnp.einsum("bshr,rhk->bshk", o_lat, params["wv_b"])  # (B,1,H,dv)

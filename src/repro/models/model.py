@@ -171,7 +171,11 @@ def context_len_for(cfg: ModelConfig, prompt_len: int, new_tokens: int) -> int:
 
 
 def init_cache(cfg: ModelConfig, batch: int, context_len: int, *,
-               window: int = 0, dtype=jnp.bfloat16):
+               window: int = 0, dtype=jnp.bfloat16,
+               per_slot_pos: bool = False):
+    if per_slot_pos:
+        return _mod(cfg).init_cache(cfg, batch, context_len, window=window,
+                                    dtype=dtype, per_slot_pos=True)
     return _mod(cfg).init_cache(cfg, batch, context_len, window=window,
                                 dtype=dtype)
 

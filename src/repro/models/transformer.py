@@ -38,6 +38,11 @@ class DistContext:
     use_kernel: bool = False
     remat: bool = False           # activation checkpointing on blocks
     remat_policy: str = "none"    # none | dots — jax.checkpoint policy
+    moe_cap_factor: float = 2.0   # dispatch-path expert capacity factor
+    moe_exact: bool = False       # capacity = T: no pair is ever dropped, so
+    #                               MoE outputs are batch-composition-invariant
+    #                               (required by the continuous-batching engine
+    #                               for request-isolated determinism)
 
     def constrain(self, x, spec: P):
         return jax.lax.with_sharding_constraint(
@@ -149,13 +154,20 @@ def _moe_forward(p, x, cfg, dist: Optional[DistContext], aux: bool = False):
             load_aware=dist.load_aware, use_kernel=dist.use_kernel)
         return (y, aux_val) if aux else y
     xt = x.reshape(-1, d)
+    cap_factor = dist.moe_cap_factor if dist is not None else 2.0
+    # exact mode: one expert can receive at most one pair per token, so
+    # capacity == T guarantees zero overflow drops at any load skew
+    capacity = xt.shape[0] if dist is not None and dist.moe_exact else None
     if dist is not None and dist.dualsparse:
         pairs = moe_mod.route_dualsparse(p, xt, cfg)
         y = moe_mod.moe_forward_dispatch(p, xt, cfg, pairs=pairs,
-                                         capacity_factor=2.0,
-                                         use_kernel=dist.use_kernel if dist else False)
+                                         capacity_factor=cap_factor,
+                                         capacity=capacity,
+                                         use_kernel=dist.use_kernel)
     else:
-        y = moe_mod.moe_forward_dispatch(p, xt, cfg, capacity_factor=2.0)
+        y = moe_mod.moe_forward_dispatch(p, xt, cfg,
+                                         capacity_factor=cap_factor,
+                                         capacity=capacity)
     y = y.reshape(B, S, d)
     return (y, aux_val) if aux else y
 
@@ -470,7 +482,9 @@ def prefill(params, batch, cfg, *, cache_len: int = 0, window: int = 0,
 
 def decode_step(params, token, cache, cfg, *, window: int = 0,
                 dist: Optional[DistContext] = None):
-    """token: (B,1) -> (logits (B,1,vocab), new cache). cache carries 'pos'."""
+    """token: (B,1) -> (logits (B,1,vocab), new cache). cache carries 'pos' —
+    a scalar shared by the batch (synchronized decode) or a (B,) vector of
+    per-slot positions (continuous batching over ragged requests)."""
     pos = cache["pos"]
     x = L.embed(params["embed"], token)
     x, new_cache = stack_decode(params, x, cache, pos, cfg, window=window,
@@ -486,9 +500,10 @@ def decode_step(params, token, cache, cfg, *, window: int = 0,
 # ---------------------------------------------------------------------------
 
 def init_cache(cfg, batch: int, context_len: int, *, window: int = 0,
-               dtype=jnp.bfloat16):
+               dtype=jnp.bfloat16, per_slot_pos: bool = False):
     """Layer-stacked decode cache. ``context_len`` is the KV capacity
-    (== window when windowed)."""
+    (== window when windowed). ``per_slot_pos`` makes cache['pos'] a (B,)
+    vector so each batch slot decodes at its own ragged position."""
     cap = min(window, context_len) if window else context_len
     hd = cfg.resolved_head_dim
 
@@ -522,5 +537,5 @@ def init_cache(cfg, batch: int, context_len: int, *, window: int = 0,
         cache = {"layers": jax.tree.map(
             lambda *xs: jnp.stack(xs),
             *[one_attn() for _ in range(cfg.n_layers)])}
-    cache["pos"] = jnp.zeros((), jnp.int32)
+    cache["pos"] = jnp.zeros((batch,) if per_slot_pos else (), jnp.int32)
     return cache

@@ -1,1 +1,2 @@
-from .engine import ServingEngine, GenerationConfig  # noqa: F401
+from .engine import (ContinuousBatchingEngine, GenerationConfig, Result,
+                     ServingEngine, exact_moe_dist)  # noqa: F401

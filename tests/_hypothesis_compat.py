@@ -1,0 +1,105 @@
+"""Minimal stand-in for the slice of the Hypothesis API that
+``test_property.py`` uses, so property tests still run (as deterministic
+randomized sweeps) in environments where ``hypothesis`` is not installed.
+
+Covered: ``given``, ``strategies.{sampled_from,integers,floats,booleans,
+composite}``. Each ``@given`` test runs ``MAX_EXAMPLES`` examples drawn from
+a PRNG seeded by the test name, so failures are reproducible run-to-run.
+This is intentionally NOT a shrinker/fuzzer — install hypothesis to get the
+real thing; the import gate in test_property.py prefers it when present.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import zlib
+
+MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, sample_fn):
+        self._sample_fn = sample_fn
+
+    def sample(self, rng: random.Random):
+        return self._sample_fn(rng)
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda r: seq[r.randrange(len(seq))])
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def booleans():
+    return _Strategy(lambda r: r.random() < 0.5)
+
+
+def composite(fn):
+    def builder(*args, **kwargs):
+        return _Strategy(
+            lambda r: fn(lambda strat: strat.sample(r), *args, **kwargs))
+    return builder
+
+
+def given(*strategies):
+    def decorator(f):
+        base_seed = zlib.crc32(f.__qualname__.encode())
+
+        @functools.wraps(f)
+        def wrapper(*args, **kwargs):
+            for i in range(MAX_EXAMPLES):
+                rng = random.Random(base_seed * 100003 + i)
+                drawn = [s.sample(rng) for s in strategies]
+                try:
+                    f(*args, *drawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{i} for {f.__qualname__}: "
+                        f"{drawn!r}") from e
+
+        # hide the strategy-supplied params from pytest's fixture resolution
+        # (real hypothesis does the same via its own signature rewrite)
+        wrapper.__signature__ = inspect.Signature(parameters=[])
+        return wrapper
+    return decorator
+
+
+class _SettingsMeta(type):
+    def __iter__(cls):          # list(HealthCheck) in the real API
+        return iter(())
+
+
+class HealthCheck(metaclass=_SettingsMeta):
+    pass
+
+
+class settings(metaclass=_SettingsMeta):
+    """No-op settings: profiles are irrelevant to the fallback sweep."""
+
+    def __init__(self, *args, **kwargs):
+        pass
+
+    def __call__(self, f):
+        return f
+
+    @staticmethod
+    def register_profile(name, *args, **kwargs):
+        pass
+
+    @staticmethod
+    def load_profile(name):
+        pass
+
+
+# ``from _hypothesis_compat import st`` mirrors ``hypothesis.strategies``.
+st = sys.modules[__name__]

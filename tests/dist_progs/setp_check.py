@@ -8,6 +8,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import moe, setp, reconstruct
 from repro.models.layers import split_params
+from repro.launch.mesh import make_mesh_auto, use_mesh
 import dataclasses
 
 
@@ -15,14 +16,13 @@ def main():
     cfg = get_config("olmoe-lite")
     key = jax.random.PRNGKey(0)
     params, _ = split_params(moe.make_moe_params(key, cfg))
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh_auto((2, 4), ("data", "model"))
     B, S, d = 4, 16, cfg.d_model
     x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d)) * 0.5
     y_ref = moe.moe_forward_ref(params, x.reshape(-1, d), cfg).reshape(B, S, d)
 
     pl = setp.place_params_strided(params, 4)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         y = setp.setp_moe_forward(pl, x, cfg, mesh, cap_factor=4.0,
                                   local_cap_factor=8.0,
                                   wire_dtype=jnp.float32)
@@ -33,22 +33,21 @@ def main():
     pr = reconstruct.partition_and_reconstruct(params, x.reshape(-1, d), cfg,
                                                p=2)
     pr = setp.place_params_strided(pr, 4)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         y2 = setp.setp_moe_forward(pr, x, cfg2, mesh, dualsparse=True,
                                    cap_factor=4.0, local_cap_factor=8.0,
                                    wire_dtype=jnp.float32)
     ds_err = float(jnp.abs(y2 - y_ref).max())
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         y3 = setp.setp_moe_forward(pr, x, cfg, mesh, dualsparse=True,
                                    load_aware=True, cap_factor=4.0,
                                    local_cap_factor=8.0,
                                    wire_dtype=jnp.float32)
     la_finite = bool(jnp.isfinite(y3).all())
 
-    mesh2 = jax.make_mesh((4, 2), ("ep", "tp"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    with jax.set_mesh(mesh2):
+    mesh2 = make_mesh_auto((4, 2), ("ep", "tp"))
+    with use_mesh(mesh2):
         y4 = setp.etp_moe_forward(params, x, cfg, mesh2, cap_factor=4.0,
                                   local_cap_factor=8.0)
     etp_err = float(jnp.abs(y4 - y_ref).max())

@@ -1,20 +1,27 @@
-"""Hypothesis property-based tests on the system's invariants."""
+"""Hypothesis property-based tests on the system's invariants.
+
+Falls back to the deterministic randomized sweep in ``_hypothesis_compat``
+when hypothesis is not installed (the CI container does not ship it)."""
 import dataclasses
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    hypothesis.settings.register_profile(
+        "ci", deadline=None, max_examples=20,
+        suppress_health_check=list(hypothesis.HealthCheck))
+    hypothesis.settings.load_profile("ci")
+except ImportError:
+    from _hypothesis_compat import st, given, settings  # noqa: F401
 
 from repro.core import drop, gating, load_aware, moe, partition
 from repro.models.layers import split_params
-
-hypothesis.settings.register_profile(
-    "ci", deadline=None, max_examples=20,
-    suppress_health_check=list(hypothesis.HealthCheck))
-hypothesis.settings.load_profile("ci")
 
 
 @st.composite
@@ -104,6 +111,52 @@ def test_dispatch_agrees_with_ref_property(seed):
     y0 = moe.moe_forward_ref(params, x, cfg)
     y1 = moe.moe_forward_dispatch(params, x, cfg, capacity_factor=8.0)
     np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=1e-4)
+
+
+@given(st.integers(0, 2 ** 16), st.floats(0.0, 0.6), st.floats(0.0, 0.3))
+def test_two_t_modes_partition_exactly(seed, t_major, gap):
+    """∀ scores/thresholds: MODE_DROP / MODE_MAJOR / MODE_FULL are mutually
+    exclusive AND exhaustive — every pair lands in exactly one mode, and each
+    mode's membership matches its defining predicate (paper §4.2)."""
+    t_minor = t_major + gap
+    key = jax.random.PRNGKey(seed)
+    s = jax.random.uniform(key, (96, 4))
+    modes = np.asarray(drop.two_t_modes(s, t_major, t_minor))
+    s = np.asarray(s)
+    in_drop = modes == drop.MODE_DROP
+    in_major = modes == drop.MODE_MAJOR
+    in_full = modes == drop.MODE_FULL
+    # exhaustive: no pair escapes the three modes
+    assert np.all(in_drop | in_major | in_full)
+    # mutually exclusive: exactly one mode per pair
+    assert np.all(in_drop.astype(int) + in_major.astype(int)
+                  + in_full.astype(int) == 1)
+    # each region matches its defining predicate
+    np.testing.assert_array_equal(in_full, s >= t_minor)
+    np.testing.assert_array_equal(in_major, (s > t_major) & (s < t_minor))
+    np.testing.assert_array_equal(in_drop, s <= t_major)
+    # the expanded sub-expert keep mask realizes the modes: majors kept for
+    # mode>=1, minors kept only for mode 2
+    idx = jax.random.randint(jax.random.fold_in(key, 1), (96, 4), 0, 8)
+    pairs = drop.expand_pairs_2t(idx, jnp.ones((96, 4)), jnp.asarray(s), 2,
+                                 t_major, t_minor)
+    keep = np.asarray(pairs.keep).reshape(96, 4, 2)
+    np.testing.assert_array_equal(keep[:, :, 0], ~in_drop)
+    np.testing.assert_array_equal(keep[:, :, 1], in_full)
+
+
+@given(st.integers(0, 2 ** 16), st.sampled_from([2, 4]))
+def test_one_t_drop_at_zero_keeps_everything(seed, p):
+    """1T-Drop with T¹=0 never drops: normalized gating scores are strictly
+    positive, so `score > 0` holds for every routed pair."""
+    key = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(key, (64, 8))
+    probs = jax.nn.softmax(logits, axis=-1)
+    score, idx = jax.lax.top_k(probs, 4)
+    pairs = drop.expand_pairs_1t(idx, score, score, p, 0.0)
+    assert bool(pairs.keep.all())
+    assert float(drop.drop_rate(pairs)) == 0.0
+    assert np.all(np.asarray(pairs.modes) == drop.MODE_FULL)
 
 
 @given(st.integers(0, 2 ** 16), st.floats(0.0, 0.3))

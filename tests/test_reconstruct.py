@@ -60,6 +60,53 @@ def test_reconstruct_no_drop_exact(rng, moe_cfg, moe_params, calib_x):
     np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=1e-5)
 
 
+def test_partition_reconstruction_regression_dispatch(rng, moe_cfg,
+                                                      moe_params, calib_x):
+    """Regression pin for the paper's core §3 invariant on the PRODUCTION
+    path: the capacity-dispatch forward over partitioned+reconstructed
+    experts with no dropping must agree with the dense reference over the
+    ORIGINAL experts within fp tolerance. Guards partition/reconstruct and
+    the dispatch machinery against future kernel refactors."""
+    rec = reconstruct.partition_and_reconstruct(moe_params, calib_x, moe_cfg,
+                                                p=2)
+    x = jax.random.normal(rng, (40, moe_cfg.d_model))
+    y0 = moe.moe_forward_ref(moe_params, x, moe_cfg)
+    r = gating.route(x, moe_params["wg"], moe_cfg.top_k,
+                     moe_cfg.router_norm_topk)
+    pairs = drop.expand_pairs_2t(r.idx, r.combine, r.norm_score, 2,
+                                 -1.0, -1.0)
+    # capacity == T: no overflow drops, so dispatch must be exact
+    y1 = moe.moe_forward_dispatch(rec, x, moe_cfg, pairs=pairs,
+                                  capacity=x.shape[0])
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=1e-4)
+
+
+def test_partition_reconstruction_regression_model(rng, moe_cfg):
+    """Same §3 invariant end-to-end through the model: full-model forward
+    with transformed params (2T thresholds disabled, exact dispatch) matches
+    the untransformed model's logits within fp tolerance."""
+    import dataclasses as dc
+    from repro.data.pipeline import calibration_activations
+    from repro.models import model as M
+    from repro.serving import exact_moe_dist
+
+    # thresholds below any score => nothing drops; exact capacity => no
+    # overflow; outputs must then be preserved by partition+reconstruction
+    cfg = dc.replace(moe_cfg, dualsparse=dc.replace(
+        moe_cfg.dualsparse, t_major=-1.0, t_minor=-1.0))
+    params = M.init_params(rng, cfg)
+    calib = calibration_activations(jax.random.fold_in(rng, 3), 128,
+                                    cfg.d_model)
+    tparams = M.transform_params_for_dualsparse(params, cfg, calib)
+    batch = M.make_batch(rng, cfg, 2, 16, "serve")
+    from repro.models import transformer as T
+    base = T.forward(params, batch, cfg, dist=exact_moe_dist(None))
+    dist = dc.replace(exact_moe_dist(None), dualsparse=True)
+    recon = T.forward(tparams, batch, cfg, dist=dist)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(recon),
+                               atol=2e-3, rtol=1e-3)
+
+
 def test_major_only_better_than_minor_only(rng, moe_cfg, moe_params,
                                            calib_x):
     """Computing only the MAJOR halves must approximate the full output
