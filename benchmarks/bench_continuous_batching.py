@@ -139,10 +139,12 @@ def main():
     m, p95 = lat_stats(lat_c)
     print(f"continuous  ({args.slots} slots): {tps_c:6.1f} tok/s  "
           f"latency mean {m:.2f}s p95 {p95:.2f}s  wall {wall_c:.2f}s")
+    from common import moe_overflow
     print(f"  scheduler: admitted={eng.n_admitted} "
           f"decode_steps={eng.decode_steps} "
           f"max_concurrency={eng.max_concurrency} "
-          f"traces(prefill={eng.prefill_traces}, decode={eng.decode_traces})")
+          f"traces(prefill={eng.prefill_traces}, decode={eng.decode_traces}) "
+          f"moe_overflow={moe_overflow(eng)}")
 
     tps_s, lat_s, wall_s = run_sync(cfg, params, traffic, args.slots,
                                     max_prompt, max_new)

@@ -2,14 +2,19 @@
 granular dropping converts directly into GEMM-size reduction. Here the
 dispatch buffers (and the Pallas kernel's live block count) shrink with the
 post-drop capacity; we time the jitted MoE layer at several drop rates on
-CPU and report wall-time speedup alongside the FLOPs-saved fraction."""
+CPU and report wall-time speedup alongside the FLOPs-saved fraction.
+
+Expressed as a SparsityPolicy sweep: one ``TwoTDrop`` per target drop rate,
+thresholds calibrated by ``policy.prepare`` (rate-space band around the
+target); the baseline is the keep-everything 2T policy."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core import drop, gating, moe, reconstruct
+from repro.core import drop, moe
+from repro.core.policy import TwoTDrop
 from repro.data import pipeline
 from repro.models.layers import split_params
 
@@ -23,16 +28,19 @@ def run() -> list[Row]:
     params, _ = split_params(moe.make_moe_params(key, cfg))
     params = sharp_router_params(params)
     x = pipeline.calibration_activations(key, 2048, cfg.d_model)
-    rec = reconstruct.partition_and_reconstruct(params, x, cfg, p=2)
-    rec["wg"] = params["wg"]
-    r = gating.route(x, params["wg"], cfg.top_k, cfg.router_norm_topk)
+
+    # prepare (partition + reconstruction) ONCE; each sweep point only
+    # re-calibrates thresholds against the shared prepared params
+    keep_all = TwoTDrop(partition_p=2, t_major=-1.0, t_minor=-1.0)
+    rec, keep_all = keep_all.prepare(params, cfg, x)
+    sweep = [("drop0.00", keep_all)]
+    sweep += [(f"drop{t:.2f}",
+               TwoTDrop(partition_p=2, drop_target=t).calibrate(rec, cfg, x))
+              for t in (0.1, 0.25, 0.4)]
 
     base_us = None
-    for target in (0.0, 0.1, 0.25, 0.4):
-        t1 = float(jnp.quantile(r.norm_score, target)) if target else -1.0
-        gap = max(min(0.01, t1 * 0.2), 1e-4)
-        pairs = moe.route_dualsparse(rec, x, cfg,
-                                     thresholds=(t1 - gap, t1 + gap))
+    for label, pol in sweep:
+        pairs = pol.route(rec, x, cfg)
         fs = float(drop.flops_saved_fraction(pairs.modes))
         # capacity sized to the post-drop load (what a real deployment does)
         cap = moe.capacity_for(x.shape[0], pairs.idx.shape[1],
@@ -40,15 +48,14 @@ def run() -> list[Row]:
                                capacity_factor=1.25 * max(1 - fs, 0.05))
 
         @jax.jit
-        def layer(p, xx):
-            pr = moe.route_dualsparse(p, xx, cfg,
-                                      thresholds=(t1 - gap, t1 + gap))
+        def layer(p, xx, pol=pol, cap=cap):
+            pr = pol.route(p, xx, cfg)
             return moe.moe_forward_dispatch(p, xx, cfg, pairs=pr,
                                             capacity=cap)
 
         us = time_fn(layer, rec, x, iters=5)
         if base_us is None:
             base_us = us
-        rows.append((f"fig10/drop{target:.2f}", us,
+        rows.append((f"fig10/{label}", us,
                      f"flops_saved={fs:.3f} speedup={base_us / us:.2f}x"))
     return rows

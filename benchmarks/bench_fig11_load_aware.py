@@ -1,17 +1,19 @@
 """Paper Fig 11: load-aware thresholding under EP. With skewed routing, the
-EP step time is the max device load (makespan). We compare:
+EP step time is the max device load (makespan). A registry sweep over the
+drop policies —
 
-  no-drop / 1T / 2T / 2T+load-aware
+  1t / 2t / load_aware   (vs. the keep-everything baseline)
 
-on makespan speedup (proxy for the paper's 1.41x MoE speedup) and output
-error (accuracy proxy), at the same T_max."""
+— compares makespan speedup (proxy for the paper's 1.41x MoE speedup) and
+output error (accuracy proxy), at the same T_max."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core import drop, gating, load_aware, moe, reconstruct
+from repro.core import drop, gating, load_aware, moe
+from repro.core.policy import LoadAwareTwoT, OneTDrop, TwoTDrop
 from repro.data import pipeline
 from repro.models.layers import split_params
 
@@ -29,53 +31,40 @@ def run() -> list[Row]:
     params["wg"] = params["wg"] + skew[None, :] * 0.05
     x = pipeline.calibration_activations(key, 2048, cfg.d_model)
     y0 = moe.moe_forward_ref(params, x, cfg)
-    rec = reconstruct.partition_and_reconstruct(params, x, cfg, p=2)
 
-    D = 8                                     # EP devices
-    E_sub = cfg.n_experts * 2
-    per_dev = E_sub // D
+    D = 8                                     # EP devices (contiguous blocks)
+    per_dev = cfg.n_experts // D
     r = gating.route(x, params["wg"], cfg.top_k, cfg.router_norm_topk)
     t_max = float(jnp.quantile(r.norm_score, 0.3))
     gap = max(min(0.01, t_max * 0.2), 1e-4)
 
-    base = drop.expand_pairs_2t(r.idx, r.combine, r.norm_score, 2, -1., -1.)
-    dev_of = base.idx % D                      # strided placement
+    baseline = TwoTDrop(partition_p=2, t_major=-1.0, t_minor=-1.0)
+    sweep = [
+        ("1T", OneTDrop(partition_p=2, t_drop=t_max)),
+        ("2T", TwoTDrop(partition_p=2, t_major=t_max - gap,
+                        t_minor=t_max + gap)),
+        ("2T+load-aware", LoadAwareTwoT(partition_p=2, n_devices=D,
+                                        t_max=t_max, t_gap=gap)),
+    ]
 
-    def stats(pairs, label):
+    rec, _ = baseline.prepare(params, cfg, x)
+
+    def stats(pairs):
+        # device of a sub-pair via its ORIGINAL expert (contiguous layout,
+        # matching LoadAwareTwoT's dispatch-path model)
+        dev_of = (pairs.idx // 2) // per_dev
         hist = jax.vmap(lambda d, k: jnp.zeros(D).at[d].add(
             k.astype(jnp.float32)), in_axes=(0, 0))(dev_of, pairs.keep)
         loads = hist.sum(0)
         y = moe.moe_forward_ref(rec, x, cfg, pairs=pairs)
         return loads, rel_err(y, y0)
 
-    loads0, _ = stats(base, "none")
+    loads0, _ = stats(baseline.route(rec, x, cfg))
     ms0 = float(load_aware.makespan(loads0))
 
-    # 1T uniform
-    keep = jnp.repeat(drop.one_t_keep(r.norm_score, t_max)[:, :, None], 2,
-                      2).reshape(base.keep.shape)
-    p1 = base._replace(keep=keep)
-    l1, e1 = stats(p1, "1t")
-
-    # 2T uniform
-    p2 = drop.expand_pairs_2t(r.idx, r.combine, r.norm_score, 2,
-                              t_max - gap, t_max + gap)
-    l2, e2 = stats(p2, "2t")
-
-    # 2T + load-aware: per-device thresholds from pre-drop loads
-    t_dev = load_aware.step_down_thresholds(loads0, t_max)
-    t1_pair = t_dev[dev_of]
-    is_major = (base.idx % 2) == 0
-    keep_la = jnp.where(is_major,
-                        jnp.repeat(r.norm_score[:, :, None], 2, 2).reshape(
-                            base.keep.shape) > t1_pair - gap,
-                        jnp.repeat(r.norm_score[:, :, None], 2, 2).reshape(
-                            base.keep.shape) >= t1_pair + gap)
-    pla = base._replace(keep=keep_la)
-    lla, ela = stats(pla, "2t+la")
-
-    for label, loads, err, pairs in [("1T", l1, e1, p1), ("2T", l2, e2, p2),
-                                     ("2T+load-aware", lla, ela, pla)]:
+    for label, pol in sweep:
+        pairs = pol.route(rec, x, cfg)
+        loads, err = stats(pairs)
         ms = float(load_aware.makespan(loads))
         dr = float(drop.drop_rate(pairs))
         rows.append((f"fig11/{label}", 0.0,

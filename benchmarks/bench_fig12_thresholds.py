@@ -41,18 +41,17 @@ def run() -> list[Row]:
                               for t, dr in zip(thresholds, rates))))
         h = T.block_forward(bp, h, pos, cfg)
 
-    # beyond-paper (§5.3.3 future work): per-layer calibrated thresholds
-    # equalize the drop rate across layers at a target
+    # beyond-paper (§5.3.3 future work): the per_layer policy calibrates
+    # per-layer thresholds that equalize the drop rate across layers
+    from repro.core.policy import PerLayerCalibrated2T
     from repro.data.pipeline import calibration_activations
     calib = calibration_activations(jax.random.PRNGKey(9), 512, cfg.d_model)
-    tparams = M.transform_params_for_dualsparse(params, cfg, calib,
-                                                target_drop_rate=0.25)
-    th = tparams["blocks"]["moe"]["thresholds"]
-    from repro.core import moe as moe_mod
+    pol = PerLayerCalibrated2T(partition_p=2, drop_target=0.25)
+    tparams, pol = pol.prepare(params, cfg, calib)
     achieved = []
     for layer in range(cfg.n_layers):
         moe_p = jax.tree.map(lambda a: a[layer], tparams["blocks"]["moe"])
-        pairs = moe_mod.route_dualsparse(moe_p, calib, cfg)
+        pairs = pol.route(moe_p, calib, cfg)
         achieved.append(float(drop.flops_saved_fraction(pairs.modes)))
     rows.append(("fig12/per-layer-calibrated@0.25", 0.0,
                  "achieved=" + " ".join(f"{a:.3f}" for a in achieved)))

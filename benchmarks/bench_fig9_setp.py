@@ -39,21 +39,20 @@ with jax.set_mesh(mesh):
         p, xx, cfg, mesh, cap_factor=1.5)).lower(params, x).compile()
 etp = analyze_hlo(comp.as_text())
 
-# S-ETP: partial transform P=tp, pure EP over ep*tp devices
+# S-ETP: partial transform P=tp, pure EP over ep*tp devices, expressed as
+# a keep-everything 2T policy with partition factor P=tp
 p_factor = tp
 pp = setp.place_params_strided(
     __import__("repro.core.partition", fromlist=["partial_transform"])
     .partial_transform(params, p_factor), ep * tp)
 mesh2 = jax.make_mesh((1, ep * tp), ("data", "model"),
                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
-import dataclasses
-ds = dataclasses.replace(cfg.dualsparse, partition_p=p_factor,
-                         t_major=-1.0, t_minor=-1.0)
-cfg2 = dataclasses.replace(cfg, dualsparse=ds)
+from repro.core.policy import TwoTDrop
+pol = TwoTDrop(partition_p=p_factor, t_major=-1.0, t_minor=-1.0)
 x2 = jax.ShapeDtypeStruct((1, ep * tokens, cfg.d_model), jnp.float32)
 with jax.set_mesh(mesh2):
     comp2 = jax.jit(lambda p, xx: setp.setp_moe_forward(
-        p, xx, cfg2, mesh2, dualsparse=True, cap_factor=1.5,
+        p, xx, cfg, mesh2, policy=pol, cap_factor=1.5,
         cap_multiple=1)).lower(pp, x2).compile()
 s_etp = analyze_hlo(comp2.as_text())
 

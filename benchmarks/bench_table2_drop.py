@@ -10,13 +10,28 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core import drop, gating, moe, partition, reconstruct
+from repro.core import drop, moe
+from repro.core.policy import OneTDrop, TwoTDrop
 from repro.data import pipeline
 from repro.models.layers import split_params
 
 from .common import Row, rel_err, sharp_router_params
 
 MODELS = ["mixtral-8x7b-lite", "olmoe-lite", "dsv2-lite-lite"]
+
+# the sweep: each variant is ONE policy (reconstruction on/off is a policy
+# knob, so "2T with plain partition" vs "2T with reconstruction" differ only
+# in the object handed to prepare). Thresholds calibrate to the paper's
+# ~25% operating point inside prepare().
+TARGET = 0.25
+VARIANTS = [
+    ("1T-Drop", OneTDrop(partition_p=2, reconstruction=False,
+                         drop_target=TARGET)),
+    ("2T-partition", TwoTDrop(partition_p=2, reconstruction=False,
+                              drop_target=TARGET)),
+    ("2T-reconstruct", TwoTDrop(partition_p=2, reconstruction=True,
+                                drop_target=TARGET)),
+]
 
 
 def run() -> list[Row]:
@@ -29,24 +44,10 @@ def run() -> list[Row]:
         x = pipeline.calibration_activations(jax.random.fold_in(key, 2),
                                              512, cfg.d_model)
         y0 = moe.moe_forward_ref(params, x, cfg)
-        r = gating.route(x, params["wg"], cfg.top_k, cfg.router_norm_topk)
-        # threshold at the ~25% drop-rate quantile (paper's operating point)
-        t1 = float(jnp.quantile(r.norm_score, 0.25))
-        gap = max(min(0.01, t1 * 0.2), 1e-4)
 
-        plain = partition.partial_transform(params, 2)
-        rec = reconstruct.partition_and_reconstruct(
-            params, x, cfg, p=2, method=cfg.dualsparse.importance)
-
-        p_1t = drop.expand_pairs_1t(r.idx, r.combine, r.norm_score, 2, t1)
-        p_2t = drop.expand_pairs_2t(r.idx, r.combine, r.norm_score, 2,
-                                    t1 - gap, t1 + gap)
-        variants = [
-            ("1T-Drop", plain, p_1t),
-            ("2T-partition", plain, p_2t),
-            ("2T-reconstruct", rec, p_2t),
-        ]
-        for vname, mdl, pairs in variants:
+        for vname, pol in VARIANTS:
+            mdl, cal = pol.prepare(params, cfg, x)
+            pairs = cal.route(mdl, x, cfg)
             y = moe.moe_forward_ref(mdl, x, cfg, pairs=pairs)
             dr = float(drop.flops_saved_fraction(pairs.modes))
             rows.append((f"table2/{name}/{vname}", 0.0,

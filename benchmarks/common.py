@@ -38,6 +38,19 @@ def print_rows(rows: List[Row]):
         print(f"{name},{us:.1f},{derived}")
 
 
+def moe_overflow(engine_or_cache) -> int:
+    """Token-expert pairs silently dropped by dispatch-capacity overflow —
+    works on a serving engine (``overflow_pairs``) or a raw decode cache
+    (the ``moe_overflow`` running counter). Benchmarks should report this
+    next to throughput: an overflow drop is unsanctioned accuracy loss, so
+    a speedup bought with overflow>0 is not a clean win."""
+    if hasattr(engine_or_cache, "overflow_pairs"):
+        return int(engine_or_cache.overflow_pairs)
+    if isinstance(engine_or_cache, dict):
+        return int(engine_or_cache.get("moe_overflow", 0))
+    return 0
+
+
 def sharp_router_params(params, scale: float = 20.0):
     """Sharpen a random-init router so normalized gating scores spread like a
     trained model's (random init is near-uniform; the paper's drop thresholds

@@ -59,12 +59,15 @@ def main():
                              jnp.mean(y_full ** 2)))
         print(f"{name}: flops saved {fs:.1%}, relative output error {err:.4f}")
 
-    # --- 5: generate with the full DualSparse model ---
-    tparams = M.transform_params_for_dualsparse(params, cfg, calib)
+    # --- 5: generate with the full DualSparse model. ONE policy object
+    # carries partition factor, thresholds, and execution hints end to end.
+    from repro.core.policy import make_policy
     from repro.models.transformer import DistContext
     from repro.launch.mesh import make_host_mesh
+    policy = make_policy("2t", cfg.dualsparse)
+    tparams, policy = policy.prepare(params, cfg, calib)
     dist = DistContext(mesh=make_host_mesh(1), moe_impl="dispatch",
-                       dualsparse=True)
+                       policy=policy)
     eng = ServingEngine(cfg, tparams, batch_size=2, max_prompt_len=16,
                         max_new_tokens=12, dist=dist)
     src = SyntheticLM(cfg.vocab_size)

@@ -56,15 +56,17 @@ def main():
 
     calib = calibration_activations(jax.random.fold_in(key, 7), 512,
                                     cfg.d_model)
-    tparams = M.transform_params_for_dualsparse(params, cfg, calib)
+    from repro.core.policy import make_policy
+    policy = make_policy("2t", cfg.dualsparse)
+    tparams, policy = policy.prepare(params, cfg, calib)
     dist = DistContext(mesh=make_host_mesh(1), moe_impl="dispatch",
-                       dualsparse=True)
+                       policy=policy)
     ds_eng = ServingEngine(cfg, tparams, batch_size=args.requests,
                            max_prompt_len=args.prompt_len,
                            max_new_tokens=args.new_tokens, dist=dist)
     ds_tps, ds_res = throughput(ds_eng)
     print(f"DualSparse 2T    : {ds_tps:.1f} tok/s "
-          f"(T²=({cfg.dualsparse.t_major}, {cfg.dualsparse.t_minor}))")
+          f"(T²=({policy.t_major}, {policy.t_minor}))")
 
     agree = np.mean([a.tokens == b.tokens
                      for a, b in zip(base_res, ds_res)])

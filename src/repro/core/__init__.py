@@ -7,5 +7,10 @@
 - load_aware   : load-aware thresholding for EP (§4.3)
 - moe          : MoE layer (reference + capacity dispatch)
 - setp         : Soft Expert-Tensor Parallelism via shard_map (§3.3)
+- policy       : first-class SparsityPolicy objects tying it all together
 """
 from . import gating, partition, reconstruct, drop, load_aware, moe  # noqa: F401
+from . import policy  # noqa: F401
+from .policy import (LoadAwareTwoT, NoDrop, OneTDrop,  # noqa: F401
+                     PerLayerCalibrated2T, SparsityPolicy, TwoTDrop,
+                     make_policy)

@@ -20,8 +20,7 @@ import jax.numpy as jnp
 
 from ..models.layers import Param, normal
 from . import gating
-from .drop import (SubExpertPairs, expand_pairs_1t, expand_pairs_2t,
-                   MODE_DROP, MODE_FULL, MODE_MAJOR)
+from .drop import SubExpertPairs, expand_pairs_2t, MODE_FULL
 
 
 # ---------------------------------------------------------------------------
@@ -113,13 +112,11 @@ def route_plain(params, x, cfg, n_experts=None) -> SubExpertPairs:
 # Reference forward (exact, dense over experts)
 # ---------------------------------------------------------------------------
 
-def moe_forward_ref(params, x, cfg, pairs: Optional[SubExpertPairs] = None,
-                    major_only_minor_zero: bool = False):
+def moe_forward_ref(params, x, cfg, pairs: Optional[SubExpertPairs] = None):
     """Dense oracle: every expert computed for every token.
 
     x: (T, d). If ``pairs`` is given, combine weights/keep masks come from it
-    (sub-expert ids index params' expert axis). ``major_only_minor_zero`` is
-    unused here (modes are already expressed in pairs.keep over sub-experts).
+    (sub-expert ids index params' expert axis).
     """
     E = params["w1"].shape[0]
     if pairs is None:
@@ -146,7 +143,12 @@ def capacity_for(n_tokens: int, k_eff: int, n_experts: int,
 
 def dispatch_indices(pairs: SubExpertPairs, n_experts: int, capacity: int):
     """Compute per-pair (expert, slot) coordinates. Dropped pairs and
-    over-capacity pairs get slot == capacity (out of range, discarded)."""
+    over-capacity pairs get slot == capacity (out of range, discarded).
+
+    Returns ``(flat_e, slot, overflow)`` where ``overflow`` is the scalar
+    count of KEPT pairs silently discarded because their expert's capacity
+    was exhausted — the quantity a deployment must watch (an overflow drop
+    is an accuracy loss the drop policy never sanctioned)."""
     T, K = pairs.idx.shape
     flat_e = pairs.idx.reshape(-1)
     flat_keep = pairs.keep.reshape(-1)
@@ -154,15 +156,17 @@ def dispatch_indices(pairs: SubExpertPairs, n_experts: int, capacity: int):
     onehot = onehot * flat_keep[:, None].astype(jnp.int32)
     pos = jnp.cumsum(onehot, axis=0) - onehot                  # (T*K, E)
     slot = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    overflow = jnp.sum((flat_keep & (slot >= capacity)).astype(jnp.int32))
     slot = jnp.where(flat_keep, slot, capacity)
     slot = jnp.minimum(slot, capacity)                          # overflow drops
-    return flat_e, slot
+    return flat_e, slot, overflow
 
 
 def moe_forward_dispatch(params, x, cfg, pairs: Optional[SubExpertPairs] = None,
                          capacity_factor: float = 1.25,
                          capacity: Optional[int] = None,
-                         use_kernel: bool = False):
+                         use_kernel: bool = False,
+                         return_overflow: bool = False):
     """Scatter -> batched expert GEMM -> gather. Exact w.r.t. the reference
     whenever no token exceeds capacity.
 
@@ -171,6 +175,9 @@ def moe_forward_dispatch(params, x, cfg, pairs: Optional[SubExpertPairs] = None,
     (minor-half skipping then only reduces *dispatched* pairs, which is how
     2T-Drop still yields proportional savings on this path: the minor
     sub-expert of a mode-1 token is simply never dispatched).
+
+    ``return_overflow``: also return the scalar count of kept pairs dropped
+    by capacity overflow (see ``dispatch_indices``).
     """
     T, d = x.shape
     E = params["w1"].shape[0]
@@ -179,7 +186,7 @@ def moe_forward_dispatch(params, x, cfg, pairs: Optional[SubExpertPairs] = None,
     K = pairs.idx.shape[1]
     if capacity is None:
         capacity = capacity_for(T, K, E, capacity_factor)
-    flat_e, slot = dispatch_indices(pairs, E, capacity)
+    flat_e, slot, overflow = dispatch_indices(pairs, E, capacity)
 
     buf = jnp.zeros((E, capacity + 1, d), x.dtype)
     buf = buf.at[flat_e, slot].set(jnp.repeat(x, K, axis=0))
@@ -199,4 +206,5 @@ def moe_forward_dispatch(params, x, cfg, pairs: Optional[SubExpertPairs] = None,
     w = (pairs.combine * pairs.keep.astype(pairs.combine.dtype)).reshape(-1)
     y = (gathered * w[:, None].astype(gathered.dtype))
     y = y.reshape(T, K, d).sum(axis=1)
-    return y.astype(x.dtype) + _shared_out(params, x)
+    out = y.astype(x.dtype) + _shared_out(params, x)
+    return (out, overflow) if return_overflow else out

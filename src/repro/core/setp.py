@@ -38,8 +38,6 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
                            **{_REP_CHECK_KW: check_vma})
 
 from . import gating, moe as moe_mod
-from .drop import MODE_DROP, MODE_FULL, MODE_MAJOR, SubExpertPairs, drop_rate
-from .load_aware import step_down_thresholds
 
 
 # ---------------------------------------------------------------------------
@@ -72,15 +70,18 @@ def _ceil_mult(x: float, m: int = 8) -> int:
 
 
 def _setp_body(wg, w1, w3, w2, x_loc, *, cfg, n_dev: int, axis: str,
-               token_axes: tuple, dualsparse: bool, load_aware: bool,
-               cap_factor: float, local_cap_factor: float, use_kernel: bool,
-               drop_mode: str, cap_multiple: int = 8,
-               wire_dtype=jnp.bfloat16):
+               token_axes: tuple, policy, thresholds=None,
+               cap_factor: float, local_cap_factor: float,
+               cap_multiple: int = 8, wire_dtype=jnp.bfloat16):
     """Per-device S-ETP MoE. x_loc: (B_l, S_l, d). Experts already
-    partial-transformed (E*P sub-experts) and strided-placed; this device
-    holds w1/w3/w2 slices of L = E*P/D sub-experts."""
-    ds = cfg.dualsparse
-    p_factor = ds.partition_p if dualsparse else 1
+    partial-transformed (E*P sub-experts when ``policy.partition_p > 1``)
+    and strided-placed; this device holds w1/w3/w2 slices of L = E*P/D
+    sub-experts. The ``policy`` decides the keep mask over expanded
+    sub-expert pairs; a load-aware policy additionally costs one psum of
+    the (D,) pre-drop device histogram. ``thresholds``: optional per-layer
+    calibrated (2,) pair threaded through the shard_map (replicated)."""
+    p_factor = policy.partition_p
+    use_kernel = policy.use_kernel
     Bl, Sl, d = x_loc.shape
     xt = x_loc.reshape(-1, d)
     T = xt.shape[0]
@@ -107,24 +108,14 @@ def _setp_body(wg, w1, w3, w2, x_loc, *, cfg, n_dev: int, axis: str,
     is_major = (sub_idx % p_factor) == 0 if p_factor > 1 else \
         jnp.ones_like(sub_idx, dtype=bool)
 
-    if dualsparse:
-        if load_aware:
-            # pre-drop load histogram per EP device — one psum
-            hist = jax.nn.one_hot(dev_of, n_dev, dtype=jnp.float32).sum((0, 1))
-            for ax in token_axes + (axis,):
-                hist = jax.lax.psum(hist, ax)
-            t1 = step_down_thresholds(hist, ds.t_max)[dev_of]   # (T, K*P)
-            gap = (ds.t_minor - ds.t_major) / 2
-            t_major, t_minor = t1 - gap, t1 + gap
-        else:
-            t_major = jnp.full_like(score, ds.t_major)
-            t_minor = jnp.full_like(score, ds.t_minor)
-        if drop_mode == "1t":
-            keep = score > (t_major + t_minor) / 2
-        else:  # 2t
-            keep = jnp.where(is_major, score > t_major, score >= t_minor)
-    else:
-        keep = jnp.ones_like(sub_idx, dtype=bool)
+    loads = None
+    if policy.needs_loads:
+        # pre-drop load histogram per EP device — one psum
+        loads = jax.nn.one_hot(dev_of, n_dev, dtype=jnp.float32).sum((0, 1))
+        for ax in token_axes + (axis,):
+            loads = jax.lax.psum(loads, ax)
+    keep = policy.sub_pair_keep(score, is_major, sub_idx, cfg, n_dev=n_dev,
+                                loads=loads, thresholds=thresholds)
 
     Kp = K * p_factor
     cap = _ceil_mult(cap_factor * T * Kp / n_dev, cap_multiple)
@@ -183,19 +174,22 @@ def _setp_body(wg, w1, w3, w2, x_loc, *, cfg, n_dev: int, axis: str,
 
 
 def setp_moe_forward(params: Dict, x, cfg, mesh: Mesh, *,
-                     expert_axis: str = "model",
-                     dualsparse: bool = False, load_aware: bool = False,
+                     expert_axis: str = "model", policy=None,
                      cap_factor: float = 1.15, local_cap_factor: float = 1.25,
-                     use_kernel: bool = False, drop_mode: str = "2t",
                      cap_multiple: int = 8, wire_dtype=jnp.bfloat16,
                      x_spec: Optional[P] = None):
-    """S-ETP MoE layer. params' experts must already be partial-transformed
-    (and reconstructed, if dualsparse) AND strided-placed via
+    """S-ETP MoE layer under a ``SparsityPolicy`` (default ``NoDrop``).
+    params' experts must already be prepared by the SAME policy
+    (``policy.prepare(...)``: partial transformation + reconstruction for
+    drop policies) AND strided-placed via
     ``place_params_strided(params, mesh.shape[expert_axis])``.
 
     x: (B, S, d) — batch sharded over (pod, data), seq sharded over
     ``expert_axis`` so the AlltoAll happens within each data-parallel group.
     """
+    if policy is None:
+        from .policy import NoDrop
+        policy = NoDrop()
     n_dev = mesh.shape[expert_axis]
     token_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
     if x_spec is None:
@@ -204,27 +198,34 @@ def setp_moe_forward(params: Dict, x, cfg, mesh: Mesh, *,
         # decode steps (S == 1) keep seq replicated.
         seq_ax = expert_axis if x.shape[1] % n_dev == 0 else None
         x_spec = batch_spec(x.shape[0], mesh, extra=(seq_ax, None))
-    pspec = {
-        "wg": P(),
-        "w1": P(expert_axis), "w3": P(expert_axis), "w2": P(expert_axis),
-    }
-    if "shared" in params:
-        pspec["shared"] = {"w1": P(), "w3": P(), "w2": P()}
     body = functools.partial(
         _setp_body, cfg=cfg, n_dev=n_dev, axis=expert_axis,
-        token_axes=token_axes, dualsparse=dualsparse, load_aware=load_aware,
+        token_axes=token_axes, policy=policy,
         cap_factor=cap_factor, local_cap_factor=local_cap_factor,
-        use_kernel=use_kernel, drop_mode=drop_mode, cap_multiple=cap_multiple,
-        wire_dtype=wire_dtype)
+        cap_multiple=cap_multiple, wire_dtype=wire_dtype)
 
-    def fn(wg, w1, w3, w2, xx):
-        return body(wg, w1, w3, w2, xx)
+    # per-layer calibrated thresholds ride through the shard_map replicated
+    has_th = "thresholds" in params
+    args = [params["wg"], params["w1"], params["w3"], params["w2"]]
+    in_specs = [P(), P(expert_axis), P(expert_axis), P(expert_axis)]
+    if has_th:
+        args.append(params["thresholds"])
+        in_specs.append(P())
+    args.append(x)
+    in_specs.append(x_spec)
+
+    def fn(wg, w1, w3, w2, *rest):
+        if has_th:
+            th, xx = rest
+        else:
+            th, (xx,) = None, rest
+        return body(wg, w1, w3, w2, xx, thresholds=th)
 
     y = shard_map(
         fn, mesh=mesh,
-        in_specs=(pspec["wg"], pspec["w1"], pspec["w3"], pspec["w2"], x_spec),
+        in_specs=tuple(in_specs),
         out_specs=x_spec, check_vma=False,
-    )(params["wg"], params["w1"], params["w3"], params["w2"], x)
+    )(*args)
     if "shared" in params:
         s = params["shared"]
         h = jax.nn.silu(x @ s["w1"]) * (x @ s["w3"])

@@ -34,18 +34,20 @@ SKIPS = {
 
 
 def build_dist(cfg: ModelConfig, kind: str, mesh) -> DistContext:
-    """MoE archs: S-ETP EP always; the DualSparse inference system (2T-Drop +
-    load-aware thresholds) on the serving paths."""
+    """MoE archs: S-ETP EP always; the DualSparse inference system as a
+    SparsityPolicy (load_aware when the config asks for it, else 2t) on the
+    serving paths."""
+    from repro.core.policy import make_policy
     serving = kind in ("prefill", "decode")
-    ds = cfg.is_moe and cfg.dualsparse.enabled and serving
-    return DistContext(mesh=mesh, moe_impl="setp",
-                       dualsparse=ds, load_aware=ds and cfg.dualsparse.load_aware,
-                       use_kernel=False, remat=(kind == "train"),
-                       remat_policy="dots")
+    pol = None
+    if cfg.is_moe and cfg.dualsparse.enabled and serving:
+        name = "load_aware" if cfg.dualsparse.load_aware else "2t"
+        pol = make_policy(name, cfg.dualsparse)
+    return DistContext(mesh=mesh, moe_impl="setp", policy=pol,
+                       remat=(kind == "train"), remat_policy="dots")
 
 
-def abstract_state(cfg: ModelConfig, shape: InputShape, mesh,
-                   dualsparse: bool):
+def abstract_state(cfg: ModelConfig, shape: InputShape, mesh):
     """(abstract args, in_shardings, step_fn) for the given shape kind."""
     kind = shape.kind
     window = specs.decode_window(cfg, shape)
@@ -56,12 +58,11 @@ def abstract_state(cfg: ModelConfig, shape: InputShape, mesh,
         params, axes = M.abstract_params_and_axes(cfg, jnp.float32)
     else:
         params, axes = M.abstract_params_and_axes(cfg, jnp.bfloat16)
-        if dist.dualsparse:
+        if dist.policy is not None and dist.policy.partition_p > 1:
             def xf(p):
-                calib = jax.ShapeDtypeStruct((256, cfg.d_model), jnp.float32)
-                return M.transform_params_for_dualsparse(
-                    p, cfg, jnp.zeros(calib.shape, calib.dtype),
-                    n_ep_devices=n_ep)
+                calib = jnp.zeros((256, cfg.d_model), jnp.float32)
+                return dist.policy.prepare(p, cfg, calib,
+                                           n_ep_devices=n_ep)[0]
             new_params = jax.eval_shape(xf, params)
             axes = _retree_axes(axes, new_params)
             params = new_params
@@ -152,8 +153,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     n_chips = 512 if multi_pod else 256
     try:
         t0 = time.time()
-        args, shardings, step = abstract_state(cfg, shape, mesh,
-                                               cfg.dualsparse.enabled)
+        args, shardings, step = abstract_state(cfg, shape, mesh)
         jitted = jax.jit(step, in_shardings=shardings,
                          donate_argnums=tuple(range(len(args))) if donate
                          and shape.kind != "prefill" else ())

@@ -1,10 +1,18 @@
 """Serving driver: requests through the DualSparse-MoE serving engines.
 
+Sparsity is selected with ``--policy`` (the SparsityPolicy registry):
+  none       — plain top-k MoE
+  1t         — 1T-Drop (all-or-nothing per token-expert pair)
+  2t         — partition + reconstruction + 2T-Drop (paper §4.2)
+  load_aware — 2T with load-aware per-device thresholds (§4.3)
+  per_layer  — 2T with per-layer thresholds calibrated to --drop-target
+
 Example (CPU, reduced config):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-moe-30b-a3b \
-      --reduced --requests 8 --prompt-len 64 --new-tokens 32 --dualsparse
+      --reduced --requests 8 --prompt-len 64 --new-tokens 32 --policy 2t
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-moe-30b-a3b \
-      --reduced --engine continuous --slots 4 --requests 8
+      --reduced --engine continuous --slots 4 --requests 8 \
+      --policy per_layer --drop-target 0.25
 """
 from __future__ import annotations
 
@@ -16,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, list_archs
+from repro.core.policy import POLICIES, make_policy
 from repro.data.pipeline import SyntheticLM, calibration_activations
 from repro.models import model as M
 from repro.serving import (ContinuousBatchingEngine, GenerationConfig,
@@ -37,8 +46,13 @@ def main():
                     help="sync batch size / continuous slot count")
     ap.add_argument("--slots", type=int, default=0,
                     help="continuous engine slot count (0 = --batch-size)")
+    ap.add_argument("--policy", default=None, choices=sorted(POLICIES),
+                    help="sparsity policy (default: none)")
+    ap.add_argument("--drop-target", type=float, default=None,
+                    help="calibrate policy thresholds to this drop rate on "
+                         "synthetic calibration activations")
     ap.add_argument("--dualsparse", action="store_true",
-                    help="apply §4.2 partition+reconstruction+2T-Drop")
+                    help="DEPRECATED alias for --policy 2t")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -48,19 +62,28 @@ def main():
     key = jax.random.PRNGKey(args.seed)
     params = M.init_params(key, cfg)
 
+    policy_name = args.policy
+    if policy_name is None and args.dualsparse:
+        print("--dualsparse is deprecated; use --policy 2t")
+        policy_name = "2t"
+    policy_name = policy_name or "none"
+
     dist = None
-    if args.dualsparse and cfg.is_moe and cfg.dualsparse.enabled:
+    if policy_name != "none" and cfg.is_moe and cfg.dualsparse.enabled:
+        policy = make_policy(policy_name, cfg.dualsparse,
+                             drop_target=args.drop_target)
         calib = calibration_activations(jax.random.PRNGKey(7), 512,
                                         cfg.d_model)
-        params = M.transform_params_for_dualsparse(params, cfg, calib)
+        params, policy = policy.prepare(params, cfg, calib)
         from repro.models.transformer import DistContext
         from repro.launch.mesh import make_host_mesh
-        # single-host: dualsparse dispatch path without shard_map
+        # single-host: policy-driven dispatch path without shard_map
         dist = DistContext(mesh=make_host_mesh(1), moe_impl="dispatch",
-                           dualsparse=True)
-        print("DualSparse enabled: partition P="
-              f"{cfg.dualsparse.partition_p}, T²=({cfg.dualsparse.t_major},"
-              f" {cfg.dualsparse.t_minor})")
+                           policy=policy)
+        print(f"sparsity policy {policy.name!r}: partition P="
+              f"{policy.partition_p}"
+              + (f", drop_target={args.drop_target}"
+                 if args.drop_target is not None else ""))
 
     src = SyntheticLM(cfg.vocab_size, seed=args.seed)
     prompts = [np.asarray(src.sample_batch(
@@ -82,7 +105,8 @@ def main():
     dt = time.time() - t0
     n_tok = sum(len(r.tokens) for r in results)
     print(f"served {len(results)} requests, {n_tok} tokens "
-          f"in {dt:.2f}s ({n_tok / dt:.1f} tok/s)")
+          f"in {dt:.2f}s ({n_tok / dt:.1f} tok/s) "
+          f"policy={policy_name} moe_overflow={eng.overflow_pairs}")
     if args.engine == "continuous":
         print(f"  slots={eng.n_slots} admitted={eng.n_admitted} "
               f"decode_steps={eng.decode_steps} "

@@ -60,50 +60,18 @@ def abstract_params_and_axes(cfg: ModelConfig, dtype=jnp.float32):
 def transform_params_for_dualsparse(params, cfg: ModelConfig, calib_x,
                                     n_ep_devices: int = 0,
                                     target_drop_rate: Optional[float] = None):
-    """Apply the paper's §4.2 pipeline to every MoE layer of a model:
-    neuron-importance profiling -> reconstruction -> partial transformation
-    (P = cfg.dualsparse.partition_p), then strided placement when EP is used.
-
-    calib_x: (T, d_model) calibration activations (shared across layers —
-    a practical simplification of per-layer profiling; see DESIGN.md).
-
-    ``target_drop_rate``: beyond-paper per-layer threshold calibration (the
-    paper's §5.3.3 future work): each layer gets its own (T²_major, T²_minor)
-    hitting the target drop rate on its *own* router's calibration scores,
-    stored as blocks["moe"]["thresholds"] (2,) per layer."""
-    from ..core import drop as drop_mod
-    from ..core import gating, reconstruct, setp
+    """DEPRECATED shim over the ``SparsityPolicy`` API: equivalent to
+    ``make_policy("2t" | "per_layer", cfg.dualsparse).prepare(...)[0]``.
+    Prefer building a policy (``repro.core.policy``) and calling its
+    ``prepare`` — that also returns the calibrated policy object that the
+    rest of the stack (DistContext, engines, CLI) consumes."""
+    from ..core.policy import make_policy
     ds = cfg.dualsparse
     if not (cfg.is_moe and ds.enabled):
         return params
-
-    def xform(moe_p):
-        out = reconstruct.partition_and_reconstruct(
-            moe_p, calib_x, cfg, p=ds.partition_p, method=ds.importance)
-        if n_ep_devices:
-            out = setp.place_params_strided(out, n_ep_devices)
-        if target_drop_rate is not None:
-            # calibrate both thresholds in RATE space (band = ±5% drop rate
-            # around the target) so flops saved == target regardless of the
-            # layer's score spread: saved = (t-δ) + ½·2δ = target.
-            r = gating.route(calib_x, moe_p["wg"], cfg.top_k,
-                             cfg.router_norm_topk)
-            delta = 0.05
-            t_major = drop_mod.calibrate_threshold(
-                r.norm_score, max(target_drop_rate - delta, 0.0))
-            t_minor = drop_mod.calibrate_threshold(
-                r.norm_score, min(target_drop_rate + delta, 1.0))
-            out["thresholds"] = jnp.stack([t_major, t_minor])
-        return out
-
-    blocks = params["blocks"]
-    if "moe" in blocks:
-        # stacked layers: vmap the transform over the layer axis
-        moe_stack = blocks["moe"]
-        new_moe = jax.vmap(xform)(moe_stack)
-        params = dict(params)
-        params["blocks"] = {**blocks, "moe": new_moe}
-    return params
+    name = "per_layer" if target_drop_rate is not None else "2t"
+    pol = make_policy(name, ds, drop_target=target_drop_rate)
+    return pol.prepare(params, cfg, calib_x, n_ep_devices=n_ep_devices)[0]
 
 
 # ---------------------------------------------------------------------------

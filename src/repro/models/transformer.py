@@ -30,19 +30,19 @@ from .layers import Param, normal, ones, zeros
 
 @dataclasses.dataclass(frozen=True)
 class DistContext:
-    """How to distribute the forward pass."""
+    """How to distribute the forward pass.
+
+    MoE sparsity is configured by ONE object: ``policy`` (a
+    ``core.policy.SparsityPolicy``; ``None`` means ``NoDrop``). The policy
+    owns routing (which pairs to compute), the drop thresholds, and the
+    execution hints (kernel choice, dispatch capacity factor, exact
+    capacity for batch-composition-invariant serving). Params must have
+    been prepared by the SAME policy (``policy.prepare``)."""
     mesh: Mesh
     moe_impl: str = "setp"        # "setp" (shard_map AlltoAll EP) | "gspmd"
-    dualsparse: bool = False      # 2T-Drop enabled (params pre-transformed)
-    load_aware: bool = False
-    use_kernel: bool = False
+    policy: Optional[Any] = None  # SparsityPolicy; None == NoDrop
     remat: bool = False           # activation checkpointing on blocks
     remat_policy: str = "none"    # none | dots — jax.checkpoint policy
-    moe_cap_factor: float = 2.0   # dispatch-path expert capacity factor
-    moe_exact: bool = False       # capacity = T: no pair is ever dropped, so
-    #                               MoE outputs are batch-composition-invariant
-    #                               (required by the continuous-batching engine
-    #                               for request-isolated determinism)
 
     def constrain(self, x, spec: P):
         return jax.lax.with_sharding_constraint(
@@ -142,47 +142,54 @@ def _attn_forward(p, x, positions, cfg, *, window: int, dist,
                               dist=dist)
 
 
+def _policy_of(dist: Optional[DistContext]):
+    if dist is not None and dist.policy is not None:
+        return dist.policy
+    from ..core.policy import NoDrop
+    return NoDrop()
+
+
 def _moe_forward(p, x, cfg, dist: Optional[DistContext], aux: bool = False):
-    """Returns y, or (y, aux_loss) when ``aux`` (training)."""
+    """MoE layer forward under ``dist.policy`` (default ``NoDrop``).
+
+    Returns ``(y, aux_loss, overflow)``: aux_loss is None unless ``aux``
+    (training); overflow is the scalar count of token-expert pairs dropped
+    by dispatch-capacity overflow (0 on the setp/shard_map path, whose
+    capacities are per-device concerns)."""
     B, S, d = x.shape
     aux_val = None
     if aux:
         aux_val = moe_mod.aux_loss_for(p, x.reshape(-1, d), cfg)
+    policy = _policy_of(dist)
     if dist is not None and dist.moe_impl == "setp":
-        y = setp_mod.setp_moe_forward(
-            p, x, cfg, dist.mesh, dualsparse=dist.dualsparse,
-            load_aware=dist.load_aware, use_kernel=dist.use_kernel)
-        return (y, aux_val) if aux else y
+        y = setp_mod.setp_moe_forward(p, x, cfg, dist.mesh, policy=policy)
+        return y, aux_val, jnp.zeros((), jnp.int32)
     xt = x.reshape(-1, d)
-    cap_factor = dist.moe_cap_factor if dist is not None else 2.0
-    # exact mode: one expert can receive at most one pair per token, so
+    # per-request/per-slot threshold leaves come in shaped (B,): expand them
+    # to per-token so routing broadcasts over the flattened (B*S, d) block
+    policy = policy.per_token(B, S)
+    pairs = policy.route(p, xt, cfg)
+    # exact capacity: one expert receives at most one pair per token, so
     # capacity == T guarantees zero overflow drops at any load skew
-    capacity = xt.shape[0] if dist is not None and dist.moe_exact else None
-    if dist is not None and dist.dualsparse:
-        pairs = moe_mod.route_dualsparse(p, xt, cfg)
-        y = moe_mod.moe_forward_dispatch(p, xt, cfg, pairs=pairs,
-                                         capacity_factor=cap_factor,
-                                         capacity=capacity,
-                                         use_kernel=dist.use_kernel)
-    else:
-        y = moe_mod.moe_forward_dispatch(p, xt, cfg,
-                                         capacity_factor=cap_factor,
-                                         capacity=capacity)
-    y = y.reshape(B, S, d)
-    return (y, aux_val) if aux else y
+    y, overflow = moe_mod.moe_forward_dispatch(
+        p, xt, cfg, pairs=pairs, capacity_factor=policy.capacity_factor,
+        capacity=policy.dispatch_capacity(xt.shape[0]),
+        use_kernel=policy.use_kernel, return_overflow=True)
+    return y.reshape(B, S, d), aux_val, overflow
 
 
 def block_forward(bp, x, positions, cfg, *, window: int = 0,
                   dist: Optional[DistContext] = None, capture_cap: int = 0,
                   cache_dtype=jnp.bfloat16, with_aux: bool = False):
     """Full-sequence block forward (train / prefill). With capture_cap the
-    return is (x, cache_layer) for the prefill->decode handoff; with_aux
-    returns (x, load-balance aux loss) for MoE training."""
+    return is (x, cache_layer, moe_overflow) for the prefill->decode
+    handoff; with_aux returns (x, load-balance aux loss) for MoE training."""
+    no_overflow = jnp.zeros((), jnp.int32)
     if cfg.family == "ssm" or "mamba" in bp:
         h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
         if capture_cap:
             y, st = mm.mamba2_forward(bp["mamba"], h, cfg, return_state=True)
-            return x + y, st
+            return x + y, st, no_overflow
         x = x + mm.mamba2_forward(bp["mamba"], h, cfg)
         return (x, jnp.zeros(())) if with_aux else x
     h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
@@ -197,27 +204,31 @@ def block_forward(bp, x, positions, cfg, *, window: int = 0,
         x = x + _attn_forward(bp["attn"], h, positions, cfg, window=window,
                               dist=dist)
     h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+    overflow = no_overflow
     if "moe" in bp:
         if with_aux:
-            y, aux = _moe_forward(bp["moe"], h, cfg, dist, aux=True)
+            y, aux, _ = _moe_forward(bp["moe"], h, cfg, dist, aux=True)
             x = x + y
             return x, aux
-        x = x + _moe_forward(bp["moe"], h, cfg, dist)
+        y, _, overflow = _moe_forward(bp["moe"], h, cfg, dist)
+        x = x + y
     else:
         x = x + L.apply_mlp(bp["mlp"], h, cfg.mlp_kind)
     if with_aux:
         return x, jnp.zeros(())
-    return (x, cache_layer) if capture_cap else x
+    return (x, cache_layer, overflow) if capture_cap else x
 
 
 def block_decode(bp, x, cache_layer, pos, cfg, *, window: int = 0,
                  dist: Optional[DistContext] = None):
-    """One-token decode. cache_layer is this layer's cache dict slice."""
+    """One-token decode. cache_layer is this layer's cache dict slice.
+    Returns (x, cache_layer, moe_overflow)."""
+    no_overflow = jnp.zeros((), jnp.int32)
     if cfg.family == "ssm" or "mamba" in bp:
         h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
         st = mm.MambaState(cache_layer["conv"], cache_layer["ssm"])
         y, st = mm.mamba2_decode(bp["mamba"], h, st, cfg)
-        return x + y, {"conv": st.conv, "ssm": st.ssm}
+        return x + y, {"conv": st.conv, "ssm": st.ssm}, no_overflow
     h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
     if cfg.attn_kind == "mla":
         y, cache_layer = attn.mla_decode_attention(
@@ -227,11 +238,13 @@ def block_decode(bp, x, cache_layer, pos, cfg, *, window: int = 0,
             bp["attn"], h, cache_layer, pos, cfg, window)
     x = x + y
     h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+    overflow = no_overflow
     if "moe" in bp:
-        x = x + _moe_forward(bp["moe"], h, cfg, dist)
+        y, _, overflow = _moe_forward(bp["moe"], h, cfg, dist)
+        x = x + y
     else:
         x = x + L.apply_mlp(bp["mlp"], h, cfg.mlp_kind)
-    return x, cache_layer
+    return x, cache_layer, overflow
 
 
 # ---------------------------------------------------------------------------
@@ -297,14 +310,18 @@ def stack_forward(params, x, positions, cfg, *, window: int = 0,
 
     def body(h, bp):
         h = _maybe_constrain(h, dist, res_spec)
+        if capture_cap:
+            h2, cl, of = fwd(bp, h, positions)
+            return h2, (cl, of)
         out = fwd(bp, h, positions)
-        if capture_cap or with_aux:
+        if with_aux:
             return out
         return out, None
 
     x, caches = jax.lax.scan(body, x, params["blocks"])
     if capture_cap:
-        return x, {"layers": caches}
+        layers, ofs = caches
+        return x, {"layers": layers, "moe_overflow": jnp.sum(ofs)}
     if with_aux:
         return x, jnp.sum(caches)
     return x
@@ -330,8 +347,10 @@ def _hybrid_forward(params, x, positions, cfg, *, window: int = 0,
         mamba_fwd = jax.checkpoint(mamba_fwd)
 
     def mamba_body(h, bp):
-        out = mamba_fwd(bp, h, positions)
-        return out if capture_cap else (out, None)
+        if capture_cap:
+            h2, st, _ = mamba_fwd(bp, h, positions)
+            return h2, st
+        return mamba_fwd(bp, h, positions), None
 
     for occ in range(n_occ):
         lo, hi = occ * every, min((occ + 1) * every, n)
@@ -357,6 +376,7 @@ def _hybrid_forward(params, x, positions, cfg, *, window: int = 0,
             "mamba": jax.tree.map(lambda *xs: jnp.concatenate(xs, 0),
                                   *mamba_caches),
             "attn": jax.tree.map(lambda *xs: jnp.stack(xs), *attn_caches),
+            "moe_overflow": jnp.zeros((), jnp.int32),
         }
         return x, cache
     return x
@@ -371,11 +391,16 @@ def stack_decode(params, x, cache, pos, cfg, *, window: int = 0,
 
     def body(h, xs):
         bp, cl = xs
-        h, cl = block_decode(bp, h, cl, pos, cfg, window=window, dist=dist)
-        return h, cl
+        h, cl, of = block_decode(bp, h, cl, pos, cfg, window=window,
+                                 dist=dist)
+        return h, (cl, of)
 
-    x, new_layers = jax.lax.scan(body, x, (params["blocks"], cache["layers"]))
-    return x, {"layers": new_layers}
+    x, (new_layers, ofs) = jax.lax.scan(
+        body, x, (params["blocks"], cache["layers"]))
+    new = {"layers": new_layers}
+    if "moe_overflow" in cache:   # running total across decode steps
+        new["moe_overflow"] = cache["moe_overflow"] + jnp.sum(ofs)
+    return x, new
 
 
 def _hybrid_decode(params, x, cache, pos, cfg, *, window: int = 0,
@@ -389,7 +414,7 @@ def _hybrid_decode(params, x, cache, pos, cfg, *, window: int = 0,
 
     def mamba_body(h, xs):
         bp, cl = xs
-        h, cl = block_decode(bp, h, cl, pos, cfg, dist=dist)
+        h, cl, _ = block_decode(bp, h, cl, pos, cfg, dist=dist)
         return h, cl
 
     for occ in range(n_occ):
@@ -411,6 +436,8 @@ def _hybrid_decode(params, x, cache, pos, cfg, *, window: int = 0,
         "mamba": jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_mamba),
         "attn": {"k": jnp.stack(new_attn["k"]), "v": jnp.stack(new_attn["v"])},
     }
+    if "moe_overflow" in cache:
+        new_cache["moe_overflow"] = cache["moe_overflow"]
     return x, new_cache
 
 
@@ -538,4 +565,7 @@ def init_cache(cfg, batch: int, context_len: int, *, window: int = 0,
             lambda *xs: jnp.stack(xs),
             *[one_attn() for _ in range(cfg.n_layers)])}
     cache["pos"] = jnp.zeros((batch,) if per_slot_pos else (), jnp.int32)
+    # running count of token-expert pairs dropped by dispatch-capacity
+    # overflow (accumulated by decode steps; serving engines surface it)
+    cache["moe_overflow"] = jnp.zeros((), jnp.int32)
     return cache

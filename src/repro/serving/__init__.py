@@ -1,2 +1,3 @@
 from .engine import (ContinuousBatchingEngine, GenerationConfig, Result,
-                     ServingEngine, exact_moe_dist)  # noqa: F401
+                     ServingEngine, exact_moe_dist,
+                     merge_policy_override)  # noqa: F401

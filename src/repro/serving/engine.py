@@ -13,14 +13,20 @@ heterogeneous traffic: a fixed number of decode *slots* (the batch dimension
 of one jitted decode step), an admission queue, per-slot absolute positions
 and ragged KV handling (cache["pos"] is a (n_slots,) vector), per-request
 EOS/budget retirement that frees slots mid-decode for waiting requests, and
-a jitted fixed-shape prefill-insert so slot churn never retraces. The
-DualSparse DistContext (2T-Drop, load-aware thresholds) threads through both
-paths unchanged.
+a jitted fixed-shape prefill-insert so slot churn never retraces.
+
+MoE sparsity is configured by ONE ``SparsityPolicy`` on the DistContext
+(``core.policy``: none/1t/2t/load_aware/per_layer); requests may override
+threshold values per request via ``GenerationConfig.policy`` (same policy
+family) — the continuous engine stacks per-slot threshold leaves into the
+jitted decode step, so mixed-threshold traffic co-decodes without retrace.
 
 Request isolation: with ``exact_moe`` (continuous default) the MoE dispatch
-capacity is set so no token-expert pair is ever dropped, making each
-request's tokens independent of what else happens to be co-batched — greedy
-outputs are bit-identical to a synchronized run of the same requests.
+capacity is set so no token-expert pair is ever dropped by overflow, making
+each request's tokens independent of what else happens to be co-batched —
+greedy outputs are bit-identical to a synchronized run of the same
+requests. Overflow drops that do occur (non-exact deployments) are counted
+and surfaced via ``engine.overflow_pairs``.
 """
 from __future__ import annotations
 
@@ -34,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
+from ..core.policy import NoDrop, SparsityPolicy
 from ..models import model as M
 from ..models import transformer
 from ..models.transformer import DistContext
@@ -45,6 +52,11 @@ class GenerationConfig:
     temperature: float = 0.0          # 0 => greedy
     eos_token: int = -1               # -1 => never stop early
     seed: int = 0
+    # per-request sparsity-policy override. The continuous engine requires
+    # the SAME policy family (pytree structure) as the engine's base policy
+    # — only threshold *values* may differ, so co-batched requests decode
+    # in one jitted step with per-slot thresholds and nothing retraces.
+    policy: Optional[SparsityPolicy] = None
 
 
 @dataclasses.dataclass
@@ -61,14 +73,38 @@ class Result:
         return self.finished_s - self.submitted_s
 
 
+def merge_policy_override(base: Optional[SparsityPolicy],
+                          override: SparsityPolicy) -> SparsityPolicy:
+    """Graft a per-request override's threshold LEAVES onto the engine base
+    policy's static hints (exact_capacity, capacity_factor, ...): requests
+    choose values, the deployment keeps its execution guarantees. Raises
+    when the override is a different policy family."""
+    if base is None:
+        return override
+    if type(override) is not type(base):
+        raise ValueError(
+            f"per-request policy must match the engine's policy family "
+            f"{base.name!r} (got {override.name!r}); only threshold values "
+            f"may differ")
+    leaves = jax.tree_util.tree_flatten(override)[0]
+    base_leaves, treedef = jax.tree_util.tree_flatten(base)
+    assert len(leaves) == len(base_leaves)   # same class => same dynamics
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
 def exact_moe_dist(dist: Optional[DistContext]) -> DistContext:
     """A DistContext whose dispatch-path MoE never drops a token-expert pair
-    (capacity == T), making outputs batch-composition-invariant."""
+    by capacity overflow (capacity == T), making outputs
+    batch-composition-invariant. The existing sparsity policy is preserved
+    with its ``exact_capacity`` hint set; no policy means NoDrop + exact
+    capacity."""
     if dist is not None:
-        return dataclasses.replace(dist, moe_exact=True)
+        pol = dist.policy if dist.policy is not None else NoDrop()
+        return dataclasses.replace(
+            dist, policy=dataclasses.replace(pol, exact_capacity=True))
     from ..launch.mesh import make_host_mesh
     return DistContext(mesh=make_host_mesh(1), moe_impl="dispatch",
-                       moe_exact=True)
+                       policy=NoDrop(exact_capacity=True))
 
 
 class ServingEngine:
@@ -86,12 +122,39 @@ class ServingEngine:
         self.pad_token = pad_token
         if exact_moe and cfg.is_moe:
             dist = exact_moe_dist(dist)
+        self.dist = dist
+        self.overflow_pairs = 0          # MoE capacity-overflow drops served
         ctx = M.context_len_for(cfg, max_prompt_len, max_new_tokens)
         self.context_len = ctx
-        self._prefill = jax.jit(
-            M.make_prefill_step(cfg, cache_len=ctx, window=window, dist=dist))
-        self._serve = jax.jit(M.make_serve_step(cfg, window=window, dist=dist))
+
+        # the sparsity policy is a jit ARGUMENT (pytree): per-call overrides
+        # with the same structure change only threshold leaves -> no retrace
+        def prefill_step(params, batch, policy):
+            d = dist if (dist is None or policy is None) else \
+                dataclasses.replace(dist, policy=policy)
+            return M.make_prefill_step(cfg, cache_len=ctx, window=window,
+                                       dist=d)(params, batch)
+
+        def serve_step(params, token, cache, policy):
+            d = dist if (dist is None or policy is None) else \
+                dataclasses.replace(dist, policy=policy)
+            return M.make_serve_step(cfg, window=window,
+                                     dist=d)(params, token, cache)
+
+        self._prefill = jax.jit(prefill_step)
+        self._serve = jax.jit(serve_step)
         self.max_prompt_len = max_prompt_len
+
+    def _policy_for(self, gen: GenerationConfig) -> Optional[SparsityPolicy]:
+        base = self.dist.policy if self.dist is not None else None
+        if gen.policy is None:
+            return base
+        if self.dist is None:
+            raise ValueError("per-request policy override needs a "
+                             "DistContext-backed engine (MoE dispatch path)")
+        # keep the engine's execution hints (e.g. exact_moe's exact
+        # capacity); the request only chooses threshold values
+        return merge_policy_override(base, gen.policy)
 
     def _make_batch(self, prompts: List[np.ndarray]) -> Dict[str, jax.Array]:
         """Right-align (left-pad) prompts to the common max length so every
@@ -124,8 +187,9 @@ class ServingEngine:
     def _generate_chunk(self, prompts, gen: GenerationConfig) -> List[Result]:
         B = len(prompts)
         batch = self._make_batch(prompts)
+        policy = self._policy_for(gen)
         t0 = time.perf_counter()
-        logits, cache = self._prefill(self.params, batch)
+        logits, cache = self._prefill(self.params, batch, policy)
         logits.block_until_ready()
         t_prefill = time.perf_counter() - t0
         results = [Result(uid=i, tokens=[]) for i in range(B)]
@@ -140,7 +204,7 @@ class ServingEngine:
                         done[i] = True
             if done.all():
                 break
-            logits, cache = self._serve(self.params, last, cache)
+            logits, cache = self._serve(self.params, last, cache, policy)
             if gen.temperature > 0:
                 key = jax.random.fold_in(jax.random.PRNGKey(gen.seed), step)
                 last = jax.random.categorical(
@@ -148,6 +212,8 @@ class ServingEngine:
             else:
                 last = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         t_decode = time.perf_counter() - t0
+        if isinstance(cache, dict) and "moe_overflow" in cache:
+            self.overflow_pairs += int(cache["moe_overflow"])
         for r in results:
             r.prefill_s = t_prefill
             r.decode_s = t_decode
@@ -228,24 +294,45 @@ class ContinuousBatchingEngine:
                                              max_new_tokens)
         self._prefix = (cfg.n_frontend_tokens if cfg.frontend == "vision"
                         else 0)
+        # Per-slot sparsity policies: the base policy's threshold leaves are
+        # stacked into (n_slots,) vectors and passed to the jitted decode as
+        # a pytree ARGUMENT, so requests with per-request threshold
+        # overrides (GenerationConfig.policy, same family) co-decode in one
+        # fixed-shape step — values change, nothing retraces.
+        self._base_policy = dist.policy if dist is not None else None
+        self._policy_treedef = None
+        if self._base_policy is not None:
+            leaves, treedef = jax.tree_util.tree_flatten(self._base_policy)
+            try:
+                base = np.asarray([float(l) for l in leaves], np.float32)
+            except (TypeError, ValueError):
+                base = None        # non-scalar leaves: no per-slot stacking
+            if base is not None:
+                self._policy_treedef = treedef
+                self._base_leaves = base
+                self._slot_pol = np.tile(base[:, None], (1, n_slots))
         # trace counters: incremented only when jit actually (re)traces
         self.prefill_traces = 0
         self.decode_traces = 0
         ctx_len = self.context_len
 
-        def prefill_insert(params, tokens, valid_len, slot, cache):
+        def prefill_insert(params, tokens, valid_len, slot, cache, policy):
             self.prefill_traces += 1
+            d = dist if (dist is None or policy is None) else \
+                dataclasses.replace(dist, policy=policy)
             batch = {"tokens": tokens}
             if cfg.frontend == "vision":
                 batch["frontend"] = jnp.zeros(
                     (1, cfg.n_frontend_tokens, cfg.d_model))
             logits, small = transformer.prefill(
-                params, batch, cfg, cache_len=ctx_len, dist=dist)
+                params, batch, cfg, cache_len=ctx_len, dist=d)
             last = jax.lax.dynamic_index_in_dim(logits[0], valid_len - 1,
                                                 axis=0, keepdims=False)
             first_tok = jnp.argmax(last).astype(jnp.int32)
             small.pop("pos")
-            rest = {k: v for k, v in cache.items() if k != "pos"}
+            of_small = small.pop("moe_overflow", None)
+            skip = ("pos", "moe_overflow")
+            rest = {k: v for k, v in cache.items() if k not in skip}
 
             def ins(big, sm):
                 start = (0, slot) + (0,) * (big.ndim - 2)
@@ -255,12 +342,17 @@ class ContinuousBatchingEngine:
             new = jax.tree.map(ins, rest, small)
             new["pos"] = cache["pos"].at[slot].set(
                 self._prefix + valid_len)
+            if "moe_overflow" in cache:
+                new["moe_overflow"] = cache["moe_overflow"] + (
+                    of_small if of_small is not None else 0)
             return first_tok, new
 
-        def decode(params, tokens, cache, active):
+        def decode(params, tokens, cache, active, policy):
             self.decode_traces += 1
+            d = dist if (dist is None or policy is None) else \
+                dataclasses.replace(dist, policy=policy)
             logits, new = transformer.decode_step(params, tokens, cache, cfg,
-                                                  dist=dist)
+                                                  dist=d)
             # inactive slots hold their position (their writes land on a
             # fixed, fully-overwritten-on-admit slot — harmless by design)
             new["pos"] = jnp.where(active, new["pos"], cache["pos"])
@@ -294,6 +386,24 @@ class ContinuousBatchingEngine:
             return 0.0
         return time.perf_counter() - self._clock_origin
 
+    def _request_leaves(self, gen: GenerationConfig):
+        """Validated threshold leaves for a request (base values when the
+        request carries no override)."""
+        if gen.policy is None:
+            return self._base_leaves
+        leaves, treedef = jax.tree_util.tree_flatten(gen.policy)
+        return np.asarray([float(l) for l in leaves], np.float32)
+
+    def _stacked_policy(self):
+        """The per-slot policy pytree for one decode step (threshold leaves
+        shaped (n_slots,)), or None when the base DistContext's policy is
+        used as a closure constant."""
+        if self._policy_treedef is None:
+            return None
+        return jax.tree_util.tree_unflatten(
+            self._policy_treedef,
+            [jnp.asarray(row) for row in self._slot_pol])
+
     def submit(self, prompt, gen: Optional[GenerationConfig] = None) -> int:
         """Enqueue one request; returns its uid. Admission happens inside
         ``step()`` when a slot is free."""
@@ -305,6 +415,14 @@ class ContinuousBatchingEngine:
         if gen.max_new_tokens > self.max_new_tokens:
             raise ValueError(f"request max_new_tokens {gen.max_new_tokens} "
                              f"exceeds engine budget {self.max_new_tokens}")
+        if gen.policy is not None:
+            if self._policy_treedef is None:
+                raise ValueError(
+                    "per-request policy override requires an engine built "
+                    "with a scalar-threshold base policy (DistContext.policy)")
+            # same family required; static hints (exact capacity etc.) stay
+            # the engine's — only the override's threshold leaves are used
+            merge_policy_override(self._base_policy, gen.policy)
         uid = self._next_uid
         self._next_uid += 1
         self._queue.append(_Pending(uid, prompt, gen))
@@ -318,6 +436,8 @@ class ContinuousBatchingEngine:
         self._slots[slot] = None
         self._active[slot] = False
         self._last[slot, 0] = self.pad_token
+        if self._policy_treedef is not None:
+            self._slot_pol[:, slot] = self._base_leaves
         self.n_retired += 1
 
     def _admit(self) -> int:
@@ -333,11 +453,17 @@ class ContinuousBatchingEngine:
             req = self._queue.popleft()
             toks = np.full((1, self.max_prompt_len), self.pad_token, np.int32)
             toks[0, :len(req.prompt)] = req.prompt
+            req_policy = None
+            if self._policy_treedef is not None:
+                leaves = self._request_leaves(req.gen)
+                self._slot_pol[:, slot] = leaves
+                req_policy = jax.tree_util.tree_unflatten(
+                    self._policy_treedef, [jnp.asarray(l) for l in leaves])
             t0 = time.perf_counter()
             first, self._cache = self._prefill_insert(
                 self.params, jnp.asarray(toks),
                 jnp.asarray(len(req.prompt), jnp.int32),
-                jnp.asarray(slot, jnp.int32), self._cache)
+                jnp.asarray(slot, jnp.int32), self._cache, req_policy)
             first = int(first)
             res = self._results[req.uid]
             res.prefill_s = time.perf_counter() - t0
@@ -370,7 +496,7 @@ class ContinuousBatchingEngine:
             return bool(self._queue)
         logits, greedy, self._cache = self._decode(
             self.params, jnp.asarray(self._last), self._cache,
-            jnp.asarray(self._active))
+            jnp.asarray(self._active), self._stacked_policy())
         self.decode_steps += 1
         greedy_np = np.asarray(greedy)
         need_sampling = any(st is not None and st.gen.temperature > 0
@@ -443,6 +569,16 @@ class ContinuousBatchingEngine:
         self.n_admitted = self.n_retired = 0
         self.max_concurrency = 0
         self.decode_steps = 0
+
+    @property
+    def overflow_pairs(self) -> int:
+        """Total token-expert pairs silently dropped by dispatch-capacity
+        overflow since engine construction (0 under ``exact_moe``). The
+        counter rides in the decode cache, so reading it costs one scalar
+        transfer — no per-step sync."""
+        if isinstance(self._cache, dict) and "moe_overflow" in self._cache:
+            return int(self._cache["moe_overflow"])
+        return 0
 
     @property
     def free_slots(self) -> int:

@@ -22,10 +22,10 @@ def main():
     mesh = make_mesh_auto((2, 4), ("data", "model"))
     calib = calibration_activations(jax.random.fold_in(key, 7), 256,
                                     cfg.d_model)
-    tparams = M.transform_params_for_dualsparse(params, cfg, calib,
-                                                n_ep_devices=4)
-    dist = DistContext(mesh=mesh, moe_impl="setp", dualsparse=True,
-                       load_aware=True)
+    from repro.core.policy import make_policy
+    pol = make_policy("load_aware", cfg.dualsparse)
+    tparams, pol = pol.prepare(params, cfg, calib, n_ep_devices=4)
+    dist = DistContext(mesh=mesh, moe_impl="setp", policy=pol)
     src = SyntheticLM(cfg.vocab_size)
     prompts = [np.asarray(src.sample_batch(jax.random.fold_in(key, i), 1,
                                            12)["tokens"][0])

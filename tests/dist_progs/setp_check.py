@@ -28,21 +28,21 @@ def main():
                                   wire_dtype=jnp.float32)
     plain_err = float(jnp.abs(y - y_ref).max())
 
-    ds = dataclasses.replace(cfg.dualsparse, t_major=-1.0, t_minor=-1.0)
-    cfg2 = dataclasses.replace(cfg, dualsparse=ds)
+    from repro.core.policy import LoadAwareTwoT, TwoTDrop
     pr = reconstruct.partition_and_reconstruct(params, x.reshape(-1, d), cfg,
                                                p=2)
     pr = setp.place_params_strided(pr, 4)
+    keep_all = TwoTDrop(partition_p=2, t_major=-1.0, t_minor=-1.0)
     with use_mesh(mesh):
-        y2 = setp.setp_moe_forward(pr, x, cfg2, mesh, dualsparse=True,
+        y2 = setp.setp_moe_forward(pr, x, cfg, mesh, policy=keep_all,
                                    cap_factor=4.0, local_cap_factor=8.0,
                                    wire_dtype=jnp.float32)
     ds_err = float(jnp.abs(y2 - y_ref).max())
 
+    la = LoadAwareTwoT(partition_p=2, t_max=cfg.dualsparse.t_max)
     with use_mesh(mesh):
-        y3 = setp.setp_moe_forward(pr, x, cfg, mesh, dualsparse=True,
-                                   load_aware=True, cap_factor=4.0,
-                                   local_cap_factor=8.0,
+        y3 = setp.setp_moe_forward(pr, x, cfg, mesh, policy=la,
+                                   cap_factor=4.0, local_cap_factor=8.0,
                                    wire_dtype=jnp.float32)
     la_finite = bool(jnp.isfinite(y3).all())
 

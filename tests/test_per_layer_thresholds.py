@@ -57,10 +57,12 @@ def test_transform_with_target_drop_rate(rng):
         fs = float(drop.flops_saved_fraction(pairs.modes))
         assert abs(fs - 0.25) < 0.08, (layer, fs)
     # and the model still runs end to end with the stored thresholds
+    from repro.core.policy import make_policy
     from repro.models.transformer import DistContext
     from repro.launch.mesh import make_host_mesh
     dist = DistContext(mesh=make_host_mesh(1), moe_impl="dispatch",
-                       dualsparse=True)
+                       policy=make_policy("per_layer", cfg.dualsparse,
+                                          drop_target=0.25))
     batch = M.make_batch(rng, cfg, 2, 16, "train")
     loss = M.loss_fn(tparams, batch, cfg, dist=dist)
     assert bool(jnp.isfinite(loss))

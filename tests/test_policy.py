@@ -1,0 +1,332 @@
+"""First-class SparsityPolicy API: registry, equivalence with the dense
+reference, pytree/jit behaviour, per-request overrides through the serving
+engines, capacity-overflow observability, and the regression pin against
+the pre-refactor --dualsparse (route_dualsparse) path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import drop, gating, moe, policy as pol_mod
+from repro.core.policy import (POLICIES, LoadAwareTwoT, NoDrop, OneTDrop,
+                               PerLayerCalibrated2T, TwoTDrop, make_policy)
+from repro.models import model as M
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def test_registry_complete():
+    assert set(POLICIES) == {"none", "1t", "2t", "load_aware", "per_layer"}
+    ds = get_config("olmoe-lite").dualsparse
+    for name in POLICIES:
+        p = make_policy(name, ds)
+        assert p.name == name
+    with pytest.raises(KeyError):
+        make_policy("3t")
+
+
+# ---------------------------------------------------------------------------
+# Equivalence: every policy with thresholds -> keep-all matches the dense
+# reference, through the dispatch layer AND the full model
+# ---------------------------------------------------------------------------
+
+def _keep_all_policy(name):
+    return {
+        "none": NoDrop(),
+        "1t": OneTDrop(partition_p=2, t_drop=-1.0),
+        "2t": TwoTDrop(partition_p=2, t_major=-1.0, t_minor=-1.0),
+        "load_aware": LoadAwareTwoT(partition_p=2, t_max=-1.0, t_gap=0.0),
+        "per_layer": PerLayerCalibrated2T(partition_p=2, drop_target=0.25),
+    }[name]
+
+
+def _disable_thresholds(name, prepared):
+    """per_layer stores thresholds in the params; force them keep-all."""
+    if name != "per_layer":
+        return prepared
+    out = dict(prepared)
+    out["thresholds"] = jnp.full_like(prepared["thresholds"], -1.0)
+    return out
+
+
+@pytest.mark.parametrize("name", sorted(POLICIES))
+def test_keep_all_matches_dense_reference_dispatch(rng, moe_cfg, moe_params,
+                                                   calib_x, name):
+    policy = _keep_all_policy(name)
+    x = jax.random.normal(rng, (48, moe_cfg.d_model)) * 0.5
+    y0 = moe.moe_forward_ref(moe_params, x, moe_cfg)
+    prepared, policy = policy.prepare(moe_params, moe_cfg, calib_x)
+    prepared = _disable_thresholds(name, prepared)
+    pairs = policy.route(prepared, x, moe_cfg)
+    y1, overflow = moe.moe_forward_dispatch(prepared, x, moe_cfg,
+                                            pairs=pairs, capacity=x.shape[0],
+                                            return_overflow=True)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=1e-4)
+    assert int(overflow) == 0
+
+
+@pytest.mark.parametrize("name", sorted(POLICIES))
+def test_keep_all_matches_dense_reference_full_model(rng, moe_cfg, name):
+    from repro.data.pipeline import calibration_activations
+    from repro.models import transformer as T
+    from repro.serving import exact_moe_dist
+
+    policy = dataclasses.replace(_keep_all_policy(name), exact_capacity=True)
+    params = M.init_params(rng, moe_cfg)
+    calib = calibration_activations(jax.random.fold_in(rng, 5), 128,
+                                    moe_cfg.d_model)
+    tparams, policy = policy.prepare(params, moe_cfg, calib)
+    if name == "per_layer":
+        blocks = dict(tparams["blocks"])
+        blocks["moe"] = dict(blocks["moe"])
+        blocks["moe"]["thresholds"] = jnp.full_like(
+            blocks["moe"]["thresholds"], -1.0)
+        tparams = {**tparams, "blocks": blocks}
+    batch = M.make_batch(rng, moe_cfg, 2, 12, "serve")
+    base = T.forward(params, batch, moe_cfg, dist=exact_moe_dist(None))
+    dist = dataclasses.replace(exact_moe_dist(None), policy=policy)
+    got = T.forward(tparams, batch, moe_cfg, dist=dist)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(got),
+                               atol=2e-3, rtol=1e-3)
+
+
+def test_load_aware_uniform_loads_equals_2t(moe_cfg, moe_params, calib_x):
+    """§4.3 degenerates to uniform 2T when every device is equally loaded."""
+    la = LoadAwareTwoT(partition_p=2, n_devices=4, t_max=0.10, t_gap=0.01)
+    two = TwoTDrop(partition_p=2, t_major=0.09, t_minor=0.11)
+    prepared, _ = two.prepare(moe_params, moe_cfg, calib_x)
+    uniform = jnp.full((4,), 100.0)
+    pa = la.route(prepared, calib_x, moe_cfg, loads=uniform)
+    pb = two.route(prepared, calib_x, moe_cfg)
+    for a, b in zip(pa, pb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Pytree / jit behaviour
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(POLICIES))
+def test_policy_pytree_roundtrip(name):
+    ds = get_config("olmoe-lite").dualsparse
+    p = make_policy(name, ds, use_kernel=False, exact_capacity=True)
+    leaves, treedef = jax.tree_util.tree_flatten(p)
+    q = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert q == p
+    assert q.exact_capacity and q.partition_p == p.partition_p
+
+
+def test_policy_jit_no_retrace_on_threshold_values(moe_cfg, moe_params,
+                                                   calib_x):
+    """Thresholds are traced leaves: re-entering jit with different VALUES
+    of the same policy family must not retrace."""
+    two = TwoTDrop(partition_p=2, t_major=-1.0, t_minor=-1.0)
+    prepared, _ = two.prepare(moe_params, moe_cfg, calib_x)
+    traces = []
+
+    @jax.jit
+    def kept(policy, x):
+        traces.append(1)
+        return policy.route(prepared, x, moe_cfg).keep.sum()
+
+    x = calib_x[:32]
+    n_a = int(kept(TwoTDrop(partition_p=2, t_major=0.05, t_minor=0.07), x))
+    n_b = int(kept(TwoTDrop(partition_p=2, t_major=0.10, t_minor=0.30), x))
+    assert len(traces) == 1
+    assert n_a >= n_b                   # higher thresholds keep fewer
+    # structural change (different family) retraces — by design
+    kept(OneTDrop(partition_p=2, t_drop=0.05), x)
+    assert len(traces) == 2
+
+
+# ---------------------------------------------------------------------------
+# Regression pin: the 2t policy IS the pre-refactor --dualsparse path
+# ---------------------------------------------------------------------------
+
+def test_2t_policy_routes_identically_to_route_dualsparse(moe_cfg,
+                                                          moe_params,
+                                                          calib_x):
+    """route_dualsparse (the pre-refactor routing entry) and the TwoTDrop
+    policy must produce bit-identical pair lists for the config thresholds,
+    so --policy 2t reproduces the old --dualsparse tokens exactly."""
+    from repro.core import reconstruct
+    ds = moe_cfg.dualsparse
+    rec = reconstruct.partition_and_reconstruct(moe_params, calib_x, moe_cfg,
+                                                p=ds.partition_p)
+    pol = make_policy("2t", ds)
+    a = pol.route(rec, calib_x, moe_cfg)
+    b = moe.route_dualsparse(rec, calib_x, moe_cfg)
+    for fa, fb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+    # and the per-layer side-channel: params["thresholds"] is honoured the
+    # same way by the per_layer policy as by route_dualsparse
+    rec_th = dict(rec)
+    rec_th["thresholds"] = jnp.asarray([0.05, 0.09])
+    pl = make_policy("per_layer", ds)
+    a = pl.route(rec_th, calib_x, moe_cfg)
+    b = moe.route_dualsparse(rec_th, calib_x, moe_cfg)
+    for fa, fb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+
+
+# ---------------------------------------------------------------------------
+# Capacity-overflow observability
+# ---------------------------------------------------------------------------
+
+def test_overflow_count_exact(rng, moe_cfg, moe_params):
+    """Forcing a tiny capacity must report EXACTLY the pairs that could not
+    be seated (per-expert kept count minus capacity, positive part)."""
+    x = jax.random.normal(rng, (96, moe_cfg.d_model)) * 0.5
+    pairs = moe.route_plain(moe_params, x, moe_cfg)
+    capacity = 4
+    y, overflow = moe.moe_forward_dispatch(moe_params, x, moe_cfg,
+                                           pairs=pairs, capacity=capacity,
+                                           return_overflow=True)
+    hist = np.asarray(gating.expert_histogram(pairs.idx,
+                                              moe_cfg.n_experts,
+                                              keep=pairs.keep))
+    expected = int(np.maximum(hist - capacity, 0).sum())
+    assert expected > 0, "test must actually force overflow"
+    assert int(overflow) == expected
+    assert bool(jnp.isfinite(y).all())
+    # ample capacity: zero overflow
+    _, none = moe.moe_forward_dispatch(moe_params, x, moe_cfg, pairs=pairs,
+                                       capacity=x.shape[0],
+                                       return_overflow=True)
+    assert int(none) == 0
+
+
+def test_overflow_surfaces_in_serving_engine(rng, moe_cfg):
+    """An engine starved of dispatch capacity must report overflow_pairs>0;
+    the exact-capacity continuous default must report exactly 0."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.transformer import DistContext
+    from repro.serving import (ContinuousBatchingEngine, GenerationConfig,
+                               ServingEngine)
+    params = M.init_params(rng, moe_cfg)
+    prompts = [np.asarray((np.arange(24) * m) % moe_cfg.vocab_size)
+               for m in (7, 11)]
+    gen = GenerationConfig(max_new_tokens=3)
+
+    starved = DistContext(
+        mesh=make_host_mesh(1), moe_impl="dispatch",
+        policy=NoDrop(capacity_factor=0.01))
+    eng = ServingEngine(moe_cfg, params, batch_size=2, max_prompt_len=24,
+                        max_new_tokens=3, dist=starved)
+    eng.generate(prompts, gen)
+    assert eng.overflow_pairs > 0
+
+    cont = ContinuousBatchingEngine(moe_cfg, params, n_slots=2,
+                                    max_prompt_len=24, max_new_tokens=3)
+    cont.generate(prompts, gen)
+    assert cont.overflow_pairs == 0
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: 1T and load-aware through the continuous engine, and
+# per-request policy overrides
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["1t", "load_aware"])
+def test_policy_end_to_end_continuous_engine(rng, moe_cfg, name):
+    """The previously-dead 1T path (and load-aware) now run end to end
+    through the continuous-batching engine via the policy registry."""
+    from repro.data.pipeline import calibration_activations
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.transformer import DistContext
+    from repro.serving import ContinuousBatchingEngine, GenerationConfig
+    params = M.init_params(rng, moe_cfg)
+    calib = calibration_activations(jax.random.fold_in(rng, 9), 128,
+                                    moe_cfg.d_model)
+    pol = make_policy(name, moe_cfg.dualsparse)
+    tparams, pol = pol.prepare(params, moe_cfg, calib)
+    dist = DistContext(mesh=make_host_mesh(1), moe_impl="dispatch",
+                       policy=pol)
+    eng = ContinuousBatchingEngine(moe_cfg, tparams, n_slots=2,
+                                   max_prompt_len=12, max_new_tokens=4,
+                                   dist=dist)
+    prompts = [np.asarray((np.arange(12) * m) % moe_cfg.vocab_size)
+               for m in (7, 11, 13)]
+    res = eng.generate(prompts, GenerationConfig(max_new_tokens=4))
+    assert all(len(r.tokens) == 4 for r in res)
+    assert eng.decode_traces == 1 and eng.prefill_traces == 1
+
+
+def test_per_request_policy_override_isolated(rng, moe_cfg):
+    """A request carrying its own thresholds (same family) must produce the
+    same tokens co-batched as it does served alone on an engine whose base
+    policy equals the override — with zero extra traces."""
+    from repro.data.pipeline import calibration_activations
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.transformer import DistContext
+    from repro.serving import ContinuousBatchingEngine, GenerationConfig
+    params = M.init_params(rng, moe_cfg)
+    calib = calibration_activations(jax.random.fold_in(rng, 9), 128,
+                                    moe_cfg.d_model)
+    # NOTE: exact_capacity deliberately NOT set here — the engine's default
+    # exact_moe=True installs it on the base policy; a user override built
+    # from the ORIGINAL policy (different static hints) must still be
+    # accepted, with the engine's hints preserved
+    base = TwoTDrop(partition_p=2, t_major=0.07, t_minor=0.09)
+    tparams, base = base.prepare(params, moe_cfg, calib)
+    override = dataclasses.replace(base, t_major=-1.0, t_minor=-1.0)
+
+    def engine(policy):
+        dist = DistContext(mesh=make_host_mesh(1), moe_impl="dispatch",
+                           policy=policy)
+        return ContinuousBatchingEngine(moe_cfg, tparams, n_slots=3,
+                                        max_prompt_len=10, max_new_tokens=5,
+                                        dist=dist)
+
+    prompts = [np.asarray((np.arange(10) * m) % moe_cfg.vocab_size)
+               for m in (7, 11, 13)]
+    gen = GenerationConfig(max_new_tokens=5)
+    gen_ov = GenerationConfig(max_new_tokens=5, policy=override)
+
+    eng = engine(base)
+    u0 = eng.submit(prompts[0], gen)
+    u1 = eng.submit(prompts[1], gen_ov)      # keep-all override, co-batched
+    u2 = eng.submit(prompts[2], gen)
+    eng.run()
+    assert eng.decode_traces == 1            # mixed policies never retrace
+
+    solo_base = engine(base)
+    solo_ov = engine(override)
+    assert eng.result(u0).tokens == \
+        solo_base.generate([prompts[0]], gen)[0].tokens
+    assert eng.result(u1).tokens == \
+        solo_ov.generate([prompts[1]], gen)[0].tokens
+    assert eng.result(u2).tokens == \
+        solo_base.generate([prompts[2]], gen)[0].tokens
+
+    # structural mismatch is rejected at submit
+    with pytest.raises(ValueError):
+        eng.submit(prompts[0], GenerationConfig(
+            max_new_tokens=2, policy=OneTDrop(partition_p=2, t_drop=0.1)))
+
+
+def test_override_preserves_engine_execution_hints(rng, moe_cfg):
+    """A per-request override keeps the ENGINE's execution hints: with
+    exact_moe the merged policy must still pin capacity (batch invariance),
+    even though the user's override object has exact_capacity=False."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.transformer import DistContext
+    from repro.serving import ServingEngine, merge_policy_override
+    params = M.init_params(rng, moe_cfg)
+    base = TwoTDrop(partition_p=2, t_major=0.07, t_minor=0.09)
+    dist = DistContext(mesh=make_host_mesh(1), moe_impl="dispatch",
+                       policy=base)
+    eng = ServingEngine(moe_cfg, params, batch_size=2, max_prompt_len=8,
+                        max_new_tokens=2, dist=dist, exact_moe=True)
+    from repro.serving import GenerationConfig
+    override = TwoTDrop(partition_p=2, t_major=0.2, t_minor=0.3)
+    merged = eng._policy_for(GenerationConfig(policy=override))
+    assert merged.exact_capacity            # engine hint survives
+    assert float(merged.t_major) == 0.2     # request values win
+    with pytest.raises(ValueError):
+        merge_policy_override(merged, OneTDrop(t_drop=0.1))

@@ -86,22 +86,24 @@ def test_partition_reconstruction_regression_model(rng, moe_cfg):
     with transformed params (2T thresholds disabled, exact dispatch) matches
     the untransformed model's logits within fp tolerance."""
     import dataclasses as dc
+    from repro.core.policy import TwoTDrop
     from repro.data.pipeline import calibration_activations
     from repro.models import model as M
     from repro.serving import exact_moe_dist
 
     # thresholds below any score => nothing drops; exact capacity => no
     # overflow; outputs must then be preserved by partition+reconstruction
-    cfg = dc.replace(moe_cfg, dualsparse=dc.replace(
-        moe_cfg.dualsparse, t_major=-1.0, t_minor=-1.0))
+    cfg = moe_cfg
+    pol = TwoTDrop(partition_p=2, t_major=-1.0, t_minor=-1.0,
+                   exact_capacity=True)
     params = M.init_params(rng, cfg)
     calib = calibration_activations(jax.random.fold_in(rng, 3), 128,
                                     cfg.d_model)
-    tparams = M.transform_params_for_dualsparse(params, cfg, calib)
+    tparams, pol = pol.prepare(params, cfg, calib)
     batch = M.make_batch(rng, cfg, 2, 16, "serve")
     from repro.models import transformer as T
     base = T.forward(params, batch, cfg, dist=exact_moe_dist(None))
-    dist = dc.replace(exact_moe_dist(None), dualsparse=True)
+    dist = dc.replace(exact_moe_dist(None), policy=pol)
     recon = T.forward(tparams, batch, cfg, dist=dist)
     np.testing.assert_allclose(np.asarray(base), np.asarray(recon),
                                atol=2e-3, rtol=1e-3)

@@ -42,10 +42,11 @@ def test_dualsparse_end_to_end(rng):
     assert tparams["blocks"]["moe"]["w1"].shape == (
         cfg.n_layers, cfg.n_experts * 2, cfg.d_model, cfg.d_expert // 2)
 
+    from repro.core.policy import make_policy
     from repro.models.transformer import DistContext
     from repro.launch.mesh import make_host_mesh
     dist = DistContext(mesh=make_host_mesh(1), moe_impl="dispatch",
-                       dualsparse=True)
+                       policy=make_policy("2t", cfg.dualsparse))
     batch = M.make_batch(rng, cfg, 2, 32, "train")
     base = M.loss_fn(params, batch, cfg)
     dropped = M.loss_fn(tparams, batch, cfg, dist=dist)
