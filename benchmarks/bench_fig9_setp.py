@@ -20,6 +20,7 @@ import jax, jax.numpy as jnp
 from repro.configs import get_config
 from repro.core import moe, setp
 from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_mesh_auto, use_mesh
 from repro.models.layers import split_params
 
 ep, tp, tokens = int(sys.argv[1]), int(sys.argv[2]), int(sys.argv[3])
@@ -32,9 +33,8 @@ params, _ = split_params(moe.make_moe_params(key, cfg))
 x = jax.ShapeDtypeStruct((ep, tokens, cfg.d_model), jnp.float32)
 
 # ETP: EP x TP mesh
-mesh = jax.make_mesh((ep, tp), ("ep", "tp"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
-with jax.set_mesh(mesh):
+mesh = make_mesh_auto((ep, tp), ("ep", "tp"))
+with use_mesh(mesh):
     comp = jax.jit(lambda p, xx: setp.etp_moe_forward(
         p, xx, cfg, mesh, cap_factor=1.5)).lower(params, x).compile()
 etp = analyze_hlo(comp.as_text())
@@ -45,12 +45,11 @@ p_factor = tp
 pp = setp.place_params_strided(
     __import__("repro.core.partition", fromlist=["partial_transform"])
     .partial_transform(params, p_factor), ep * tp)
-mesh2 = jax.make_mesh((1, ep * tp), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh2 = make_mesh_auto((1, ep * tp), ("data", "model"))
 from repro.core.policy import TwoTDrop
 pol = TwoTDrop(partition_p=p_factor, t_major=-1.0, t_minor=-1.0)
 x2 = jax.ShapeDtypeStruct((1, ep * tokens, cfg.d_model), jnp.float32)
-with jax.set_mesh(mesh2):
+with use_mesh(mesh2):
     comp2 = jax.jit(lambda p, xx: setp.setp_moe_forward(
         p, xx, cfg, mesh2, policy=pol, cap_factor=1.5,
         cap_multiple=1)).lower(pp, x2).compile()

@@ -48,22 +48,28 @@ def run() -> list[Row]:
     rec = reconstruct.partition_and_reconstruct(params, x, cfg, p=2)
     rec["wg"] = params["wg"]
     r = gating.route(x, params["wg"], cfg.top_k, cfg.router_norm_topk)
-    E_sub = cfg.n_experts * 2
+    from repro.core import dispatch as dispatch_mod
     for target in (0.0, 0.1, 0.25, 0.4):
         t1 = float(jnp.quantile(r.norm_score, target)) if target else -1.0
         gap = max(min(0.01, t1 * 0.2), 1e-4)
         pairs = moe.route_dualsparse(rec, x, cfg,
                                      thresholds=(t1 - gap, t1 + gap))
-        hist = np.asarray(gating.expert_histogram(pairs.idx, E_sub,
-                                                  keep=pairs.keep))
-        # in the kernel layout: sub-expert rows are all "full" rows of that
-        # sub-expert's half — counts_full = hist, counts_major = 0, and the
-        # expert width is d_expert/2 (already partitioned)
-        C = int(np.ceil(hist.max() / 8) * 8)
-        skip = tile_skip_fraction(hist, np.zeros_like(hist), C,
-                                  cfg.d_expert // 2, block_c=32, block_f=64)
+        # the PRODUCTION kernel layout (moe_forward_dispatch use_kernel +
+        # mode grouping): one buffer per ORIGINAL expert of full width
+        # d_expert, FULL rows then MAJOR-only rows, minor-half tiles of the
+        # MAJOR-only tail skipped via counts_major
+        fused = dispatch_mod.fuse_sub_pairs(pairs, 2)
+        counts = np.asarray(dispatch_mod.group_histogram(
+            fused.group, cfg.n_experts, mask=fused.keep))
+        C = int(np.ceil(max(int(counts.max()), 1) / 8) * 8)
+        plan = dispatch_mod.sort_dispatch(fused.group, fused.keep,
+                                          n_groups=cfg.n_experts, capacity=C,
+                                          major_only=fused.major_only)
+        cf, cm = (np.asarray(a) for a in plan.kernel_counts(C))
+        skip = tile_skip_fraction(cf, cm, C, cfg.d_expert,
+                                  block_c=32, block_f=64)
         fs = float(drop.flops_saved_fraction(pairs.modes))
         rows.append((f"kernel_skip/drop{target:.2f}", 0.0,
                      f"flops_saved={fs:.3f} mxu_tiles_skipped={skip:.3f} "
-                     f"(capacity C={C})"))
+                     f"(capacity C={C} major_only_rows={int(cm.sum())})"))
     return rows

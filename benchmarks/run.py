@@ -20,6 +20,7 @@ BENCHES = [
     ("fig10", "benchmarks.bench_fig10_speedup"),
     ("fig11", "benchmarks.bench_fig11_load_aware"),
     ("fig12", "benchmarks.bench_fig12_thresholds"),
+    ("dispatch", "benchmarks.bench_dispatch"),
     ("importance", "benchmarks.bench_importance"),
     ("kernel_skip", "benchmarks.bench_kernel_skip"),
     ("roofline", "benchmarks.bench_roofline"),

@@ -41,16 +41,13 @@ def route(x, wg, k: int, renorm: bool) -> Routing:
 
 def load_balance_aux_loss(probs, idx, n_experts: int):
     """Switch-style auxiliary load-balance loss for training runs."""
-    T = probs.shape[0]
     me = jnp.mean(probs, axis=0)                              # (E,)
-    onehot = jax.nn.one_hot(idx, n_experts).sum(axis=1)       # (T, E)
-    ce = jnp.mean(onehot, axis=0)
+    ce = expert_histogram(idx, n_experts).astype(probs.dtype) / idx.shape[0]
     return n_experts * jnp.sum(me * ce)
 
 
 def expert_histogram(idx, n_experts: int, keep=None):
-    """Token count per expert; ``keep`` optionally masks dropped pairs."""
-    onehot = jax.nn.one_hot(idx, n_experts, dtype=jnp.int32)  # (T,K,E)
-    if keep is not None:
-        onehot = onehot * keep[..., None].astype(jnp.int32)
-    return onehot.sum(axis=(0, 1))
+    """Token count per expert; ``keep`` optionally masks dropped pairs.
+    O(N) segment histogram — no dense (T, K, E) one-hot intermediate."""
+    from .dispatch import group_histogram
+    return group_histogram(idx, n_experts, mask=keep)

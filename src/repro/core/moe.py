@@ -1,13 +1,16 @@
 """MoE layer: params, exact dense reference, and the capacity-based
-gather/scatter dispatch path used inside jit/shard_map.
+dispatch path used inside jit/shard_map.
 
 Three forward paths, all fixed-shape / jit-safe:
 
   * ``moe_forward_ref``       — computes every expert for every token and
     combines with (possibly dropped) weights. Exact oracle, O(T·E) compute.
-  * ``moe_forward_dispatch``  — sort-free capacity dispatch: scatter tokens
-    into an (E, C, d) buffer, batched expert GEMMs, scatter back. This is
-    the per-device body of S-ETP and the host of the Pallas kernel.
+  * ``moe_forward_dispatch``  — sort-based capacity dispatch
+    (``core.dispatch``): gather tokens into (E, C, d) buffers in
+    mode-ordered arrival order, batched expert GEMMs, gather back. This is
+    the per-device body of S-ETP and the host of the Pallas kernel; under a
+    partitioned drop policy with ``use_kernel`` it groups by ORIGINAL
+    expert so the dual-sparse kernel skips minor-half MXU tiles.
   * shard_map S-ETP lives in ``core.setp``.
 """
 from __future__ import annotations
@@ -19,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from ..models.layers import Param, normal
+from . import dispatch as dispatch_mod
 from . import gating
 from .drop import SubExpertPairs, expand_pairs_2t, MODE_FULL
 
@@ -142,39 +146,75 @@ def capacity_for(n_tokens: int, k_eff: int, n_experts: int,
 
 
 def dispatch_indices(pairs: SubExpertPairs, n_experts: int, capacity: int):
-    """Compute per-pair (expert, slot) coordinates. Dropped pairs and
-    over-capacity pairs get slot == capacity (out of range, discarded).
+    """Compute per-pair (expert, slot) coordinates via the sort-based plan
+    (``core.dispatch``). Dropped pairs and over-capacity pairs get
+    slot == capacity (out of range, discarded).
 
     Returns ``(flat_e, slot, overflow)`` where ``overflow`` is the scalar
     count of KEPT pairs silently discarded because their expert's capacity
     was exhausted — the quantity a deployment must watch (an overflow drop
     is an accuracy loss the drop policy never sanctioned)."""
-    T, K = pairs.idx.shape
-    flat_e = pairs.idx.reshape(-1)
-    flat_keep = pairs.keep.reshape(-1)
-    onehot = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)
-    onehot = onehot * flat_keep[:, None].astype(jnp.int32)
-    pos = jnp.cumsum(onehot, axis=0) - onehot                  # (T*K, E)
-    slot = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
-    overflow = jnp.sum((flat_keep & (slot >= capacity)).astype(jnp.int32))
-    slot = jnp.where(flat_keep, slot, capacity)
-    slot = jnp.minimum(slot, capacity)                          # overflow drops
-    return flat_e, slot, overflow
+    plan = dispatch_mod.sort_dispatch(pairs.idx, pairs.keep,
+                                      n_groups=n_experts, capacity=capacity)
+    return plan.group, plan.slot, plan.overflow
+
+
+def _pairs_partition_p(pairs: SubExpertPairs) -> int:
+    """Partial-transformation factor encoded in an expanded pair list
+    (``modes`` is per ORIGINAL pair, ``idx`` per sub-expert pair)."""
+    Kp = pairs.idx.shape[1]
+    K = pairs.modes.shape[1]
+    return Kp // K if K and Kp % K == 0 else 1
+
+
+def _fused_kernel_dispatch(params, x, cfg, pairs: SubExpertPairs, p: int,
+                           capacity: int):
+    """Original-expert-granularity dispatch for the dual-sparse kernel: one
+    row per (token, ORIGINAL expert) pair — halving dispatched pairs at P=2
+    — mode-ordered FULL-first/MAJOR-only-second, with ``counts_major``
+    driving the kernel's minor-half tile skipping (paper §4.2). Exact
+    w.r.t. the sub-expert path under partial transformation (Eq. 13)."""
+    from ..kernels import ops as kops
+    T, d = x.shape
+    E = params["w1"].shape[0] // p
+    fused = dispatch_mod.fuse_sub_pairs(pairs, p)
+    K = fused.group.shape[1]
+    plan = dispatch_mod.sort_dispatch(fused.group, fused.keep,
+                                      n_groups=E, capacity=capacity,
+                                      major_only=fused.major_only)
+    buf = dispatch_mod.gather_rows(x, plan, capacity, index_div=K)
+    cf, cm = plan.kernel_counts(capacity)
+    out_buf = kops.grouped_swiglu(buf, params["w1"], params["w3"],
+                                  params["w2"], counts_full=cf,
+                                  counts_major=cm, p_factor=p)
+    gathered = dispatch_mod.unpermute(out_buf, plan)            # (T*K, d)
+    w = (fused.combine * fused.keep.astype(fused.combine.dtype)).reshape(-1)
+    y = (gathered * w[:, None].astype(gathered.dtype))
+    return y.reshape(T, K, d).sum(axis=1), plan.overflow
 
 
 def moe_forward_dispatch(params, x, cfg, pairs: Optional[SubExpertPairs] = None,
                          capacity_factor: float = 1.25,
                          capacity: Optional[int] = None,
                          use_kernel: bool = False,
-                         return_overflow: bool = False):
-    """Scatter -> batched expert GEMM -> gather. Exact w.r.t. the reference
-    whenever no token exceeds capacity.
+                         return_overflow: bool = False,
+                         mode_grouped: bool = False):
+    """Sort-based gather -> batched expert GEMM -> gather back. Exact w.r.t.
+    the reference whenever no token exceeds capacity.
 
-    With ``use_kernel`` the batched GEMM is the Pallas dualsparse kernel
-    (block-skips minor halves); otherwise a jnp einsum computes full experts
-    (minor-half skipping then only reduces *dispatched* pairs, which is how
-    2T-Drop still yields proportional savings on this path: the minor
-    sub-expert of a mode-1 token is simply never dispatched).
+    With ``use_kernel`` the batched GEMM is the Pallas dualsparse kernel.
+    Under a partitioned drop policy (P > 1), ``mode_grouped=True``
+    (``SparsityPolicy.kernel_mode_grouping`` supplies it in production)
+    additionally groups pairs by ORIGINAL expert so 2T-Drop's MAJOR-only
+    rows sort after the FULL rows and ``counts_major`` lets the kernel skip
+    minor-half MXU tiles — the §4.2 saving, live in production. Mode
+    grouping requires a mode-monotone keep mask (a kept minor half implies
+    a kept major half — true of every registered policy); it is opt-in
+    (default off) so hand-built pair lists that violate the invariant keep
+    the exact per-sub-pair semantics. Without the kernel a jnp einsum
+    computes full sub-experts (minor-half skipping then only reduces
+    *dispatched* pairs: the minor sub-expert of a mode-1 token is simply
+    never dispatched).
 
     ``return_overflow``: also return the scalar count of kept pairs dropped
     by capacity overflow (see ``dispatch_indices``).
@@ -186,25 +226,31 @@ def moe_forward_dispatch(params, x, cfg, pairs: Optional[SubExpertPairs] = None,
     K = pairs.idx.shape[1]
     if capacity is None:
         capacity = capacity_for(T, K, E, capacity_factor)
-    flat_e, slot, overflow = dispatch_indices(pairs, E, capacity)
 
-    buf = jnp.zeros((E, capacity + 1, d), x.dtype)
-    buf = buf.at[flat_e, slot].set(jnp.repeat(x, K, axis=0))
-    buf = buf[:, :capacity]
+    p = _pairs_partition_p(pairs)
+    if use_kernel and mode_grouped and p > 1:
+        y, overflow = _fused_kernel_dispatch(params, x, cfg, pairs, p,
+                                             capacity)
+        out = y.astype(x.dtype) + _shared_out(params, x)
+        return (out, overflow) if return_overflow else out
+
+    plan = dispatch_mod.sort_dispatch(pairs.idx, pairs.keep,
+                                      n_groups=E, capacity=capacity)
+    buf = dispatch_mod.gather_rows(x, plan, capacity, index_div=K)
 
     if use_kernel:
         from ..kernels import ops as kops
-        counts = gating.expert_histogram(pairs.idx, E, keep=pairs.keep)
+        cf, cm = plan.kernel_counts(capacity)
         out_buf = kops.grouped_swiglu(buf, params["w1"], params["w3"],
-                                      params["w2"],
-                                      counts_full=jnp.minimum(counts, capacity))
+                                      params["w2"], counts_full=cf,
+                                      counts_major=cm,
+                                      n_minor_start=params["w1"].shape[-1])
     else:
         out_buf = expert_ffn(params["w1"], params["w3"], params["w2"], buf)
 
-    out_buf = jnp.pad(out_buf, ((0, 0), (0, 1), (0, 0)))
-    gathered = out_buf[flat_e, slot]                            # (T*K, d)
+    gathered = dispatch_mod.unpermute(out_buf, plan)            # (T*K, d)
     w = (pairs.combine * pairs.keep.astype(pairs.combine.dtype)).reshape(-1)
     y = (gathered * w[:, None].astype(gathered.dtype))
     y = y.reshape(T, K, d).sum(axis=1)
     out = y.astype(x.dtype) + _shared_out(params, x)
-    return (out, overflow) if return_overflow else out
+    return (out, plan.overflow) if return_overflow else out

@@ -100,6 +100,16 @@ class SparsityPolicy:
     name = "base"
     needs_loads = False             # setp body must psum a load histogram
 
+    @property
+    def kernel_mode_grouping(self) -> bool:
+        """Execution hint: with ``use_kernel`` on the dispatch path, group
+        pairs by ORIGINAL expert in mode order (FULL rows first, MAJOR-only
+        rows second) so ``counts_major`` reaches the dual-sparse kernel and
+        minor-half MXU tiles are skipped (paper §4.2). Sound for any policy
+        whose keep mask is mode-monotone (a kept minor half implies a kept
+        major half) — true of every registered drop policy."""
+        return self.partition_p > 1
+
     # -- (a) param preparation ------------------------------------------
 
     def prepare_layer(self, moe_params: Dict, cfg, calib_x=None, *,

@@ -42,7 +42,10 @@ def neuron_importance(params: Dict, x, cfg, method: str = "abs_gate",
         g = jnp.abs(g)
     if routed_only:
         r = gating.route(x, params["wg"], cfg.top_k, cfg.router_norm_topk)
-        sel = jax.nn.one_hot(r.idx, E).sum(axis=1).T               # (E,T)
+        # (T, E) routed-membership by scatter-add — no (T, K, E) one-hot
+        T = r.idx.shape[0]
+        sel = jnp.zeros((T, E), g.dtype).at[
+            jnp.arange(T)[:, None], r.idx].add(1.0).T              # (E,T)
         g = g * sel[:, :, None]
     return g.sum(axis=1)                                           # (E, f)
 

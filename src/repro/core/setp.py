@@ -12,6 +12,15 @@ dispatch and ReduceScatter+AlltoAll on return.
 
 Both are shard_map bodies in plain JAX (jax.lax collectives). Load-aware
 thresholding (§4.3) costs one psum of a (D,) histogram.
+
+All seating (device-level and local-expert-level) runs on the shared
+sort-based dispatch substrate (``core.dispatch``): stable argsort keys,
+segment-histogram counts, gather-built buffers — no dense one-hot cumsum,
+no ``jnp.repeat`` of the token block. Local buffers are mode-ordered
+(FULL rows first, MAJOR-only rows second; the flag rides in the low bit of
+the AlltoAll id payload) so ``counts_full``/``counts_major`` feed the
+dual-sparse kernel, and capacity-overflow drops are counted and psum'd out
+of the body (``setp_moe_forward(return_overflow=True)``).
 """
 from __future__ import annotations
 
@@ -37,6 +46,7 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
                            out_specs=out_specs,
                            **{_REP_CHECK_KW: check_vma})
 
+from . import dispatch as dispatch_mod
 from . import gating, moe as moe_mod
 
 
@@ -110,8 +120,10 @@ def _setp_body(wg, w1, w3, w2, x_loc, *, cfg, n_dev: int, axis: str,
 
     loads = None
     if policy.needs_loads:
-        # pre-drop load histogram per EP device — one psum
-        loads = jax.nn.one_hot(dev_of, n_dev, dtype=jnp.float32).sum((0, 1))
+        # pre-drop load histogram per EP device — one psum (O(N) segment
+        # histogram; no dense one-hot)
+        loads = dispatch_mod.group_histogram(dev_of, n_dev,
+                                             dtype=jnp.float32)
         for ax in token_axes + (axis,):
             loads = jax.lax.psum(loads, ax)
     keep = policy.sub_pair_keep(score, is_major, sub_idx, cfg, n_dev=n_dev,
@@ -120,64 +132,70 @@ def _setp_body(wg, w1, w3, w2, x_loc, *, cfg, n_dev: int, axis: str,
     Kp = K * p_factor
     cap = _ceil_mult(cap_factor * T * Kp / n_dev, cap_multiple)
 
-    # --- dispatch: slot per pair within its destination device ---
-    flat_dev = dev_of.reshape(-1)
-    flat_keep = keep.reshape(-1)
-    onehot = jax.nn.one_hot(flat_dev, n_dev, dtype=jnp.int32)
-    onehot = onehot * flat_keep[:, None].astype(jnp.int32)
-    pos = jnp.cumsum(onehot, axis=0) - onehot
-    slot = jnp.take_along_axis(pos, flat_dev[:, None], axis=1)[:, 0]
-    slot = jnp.where(flat_keep, jnp.minimum(slot, cap), cap)
-
-    x_rep = jnp.repeat(xt, Kp, axis=0)
+    # --- dispatch: sort-based seating per destination device ---
+    # MAJOR-only flags ride to the owning device (low bit of the id
+    # payload) so its local buffers can be mode-ordered for the kernel.
+    mflag = dispatch_mod.major_only_flags(keep, p_factor)
+    plan_dev = dispatch_mod.sort_dispatch(dev_of, keep,
+                                          n_groups=n_dev, capacity=cap)
     # bf16 on the wire: halves AlltoAll traffic; experts compute from bf16
     # activations (standard practice) while the combine stays in x dtype.
-    send_x = jnp.zeros((n_dev, cap + 1, d), wire_dtype)
-    send_x = send_x.at[flat_dev, slot].set(x_rep.astype(wire_dtype))[:, :cap]
-    send_e = jnp.full((n_dev, cap + 1), -1, jnp.int32)
-    send_e = send_e.at[flat_dev, slot].set(loc_of.reshape(-1))[:, :cap]
+    send_x = dispatch_mod.gather_rows(xt.astype(wire_dtype), plan_dev, cap,
+                                      index_div=Kp)
+    payload = loc_of * 2 + mflag.astype(loc_of.dtype)
+    send_e = dispatch_mod.gather_rows(payload.reshape(-1), plan_dev, cap,
+                                      fill=-1)
 
     # --- the S-ETP collective: ONE AlltoAll each way (Fig. 5b) ---
     recv_x = jax.lax.all_to_all(send_x, axis, 0, 0, tiled=False)
     recv_e = jax.lax.all_to_all(send_e, axis, 0, 0, tiled=False)
 
-    # --- local grouped expert FFN ---
+    # --- local grouped expert FFN (mode-ordered buffers) ---
     rx = recv_x.reshape(n_dev * cap, d)
-    re = recv_e.reshape(-1)
-    valid = re >= 0
+    re2 = recv_e.reshape(-1)
+    valid = re2 >= 0
+    loc = jnp.where(valid, re2 // 2, 0)
+    mfl = valid & ((re2 & 1) == 1)
     c2 = _ceil_mult(local_cap_factor * n_dev * cap / L, cap_multiple)
-    oh2 = jax.nn.one_hot(jnp.where(valid, re, 0), L, dtype=jnp.int32)
-    oh2 = oh2 * valid[:, None].astype(jnp.int32)
-    pos2 = jnp.cumsum(oh2, axis=0) - oh2
-    slot2 = jnp.take_along_axis(pos2, jnp.maximum(re, 0)[:, None], axis=1)[:, 0]
-    slot2 = jnp.where(valid, jnp.minimum(slot2, c2), c2)
-    buf = jnp.zeros((L, c2 + 1, d), rx.dtype).at[jnp.maximum(re, 0), slot2].set(rx)
-    buf = buf[:, :c2]
+    plan_loc = dispatch_mod.sort_dispatch(loc, valid, n_groups=L,
+                                          capacity=c2, major_only=mfl)
+    buf = dispatch_mod.gather_rows(rx, plan_loc, c2)
     if use_kernel:
         from ..kernels import ops as kops
-        counts = (oh2.sum(axis=0)).astype(jnp.int32)       # kept rows / expert
-        out_buf = kops.grouped_swiglu(buf, w1, w3, w2,
-                                      counts_full=jnp.minimum(counts, c2))
+        cf, cm = plan_loc.kernel_counts(c2)
+        # each local group IS one sub-expert (the halves of an original
+        # expert live on different devices — that is the S-ETP split), so
+        # no minor-half neuron region exists locally: counts_major tracks
+        # the mode ordering and pads tile-skip row validity only.
+        out_buf = kops.grouped_swiglu(buf, w1, w3, w2, counts_full=cf,
+                                      counts_major=cm,
+                                      n_minor_start=w1.shape[-1])
     else:
         out_buf = moe_mod.expert_ffn(w1, w3, w2, buf)
-    out_buf = jnp.pad(out_buf, ((0, 0), (0, 1), (0, 0)))
-    out_tok = out_buf[jnp.maximum(re, 0), slot2].astype(wire_dtype)
+    out_tok = dispatch_mod.unpermute(out_buf, plan_loc).astype(wire_dtype)
     out_tok = out_tok * valid[:, None].astype(out_tok.dtype)
 
     # --- return AlltoAll + combine on the source device ---
     back = jax.lax.all_to_all(out_tok.reshape(n_dev, cap, d), axis, 0, 0)
     back = jnp.pad(back, ((0, 0), (0, 1), (0, 0)))
-    out_pair = back[flat_dev, slot]                              # (T*Kp, d)
+    out_pair = back[plan_dev.group, plan_dev.slot]               # (T*Kp, d)
+    flat_keep = keep.reshape(-1)
     w = (combine.reshape(-1) * flat_keep.astype(combine.dtype))
     y = (out_pair * w[:, None].astype(out_pair.dtype)).reshape(T, Kp, d).sum(1)
-    return y.reshape(Bl, Sl, d).astype(x_loc.dtype)
+    # kept pairs silently discarded by capacity overflow, globally summed:
+    # device-level seating + local-expert-level seating on this shard
+    overflow = plan_dev.overflow + plan_loc.overflow
+    for ax in token_axes + (axis,):
+        overflow = jax.lax.psum(overflow, ax)
+    return y.reshape(Bl, Sl, d).astype(x_loc.dtype), overflow
 
 
 def setp_moe_forward(params: Dict, x, cfg, mesh: Mesh, *,
                      expert_axis: str = "model", policy=None,
                      cap_factor: float = 1.15, local_cap_factor: float = 1.25,
                      cap_multiple: int = 8, wire_dtype=jnp.bfloat16,
-                     x_spec: Optional[P] = None):
+                     x_spec: Optional[P] = None,
+                     return_overflow: bool = False):
     """S-ETP MoE layer under a ``SparsityPolicy`` (default ``NoDrop``).
     params' experts must already be prepared by the SAME policy
     (``policy.prepare(...)``: partial transformation + reconstruction for
@@ -186,6 +204,11 @@ def setp_moe_forward(params: Dict, x, cfg, mesh: Mesh, *,
 
     x: (B, S, d) — batch sharded over (pod, data), seq sharded over
     ``expert_axis`` so the AlltoAll happens within each data-parallel group.
+
+    ``return_overflow``: also return the GLOBAL (psum'd, replicated) count
+    of kept token/sub-expert pairs silently discarded by device-level or
+    local-expert-level capacity overflow — the unsanctioned accuracy loss a
+    deployment must watch, previously invisible on this path.
     """
     if policy is None:
         from .policy import NoDrop
@@ -221,16 +244,16 @@ def setp_moe_forward(params: Dict, x, cfg, mesh: Mesh, *,
             th, (xx,) = None, rest
         return body(wg, w1, w3, w2, xx, thresholds=th)
 
-    y = shard_map(
+    y, overflow = shard_map(
         fn, mesh=mesh,
         in_specs=tuple(in_specs),
-        out_specs=x_spec, check_vma=False,
+        out_specs=(x_spec, P()), check_vma=False,
     )(*args)
     if "shared" in params:
         s = params["shared"]
         h = jax.nn.silu(x @ s["w1"]) * (x @ s["w3"])
         y = y + h @ s["w2"]
-    return y
+    return (y, overflow) if return_overflow else y
 
 
 # ---------------------------------------------------------------------------
@@ -251,15 +274,11 @@ def _etp_body(wg, w1, w3, w2, x_loc, *, cfg, n_ep: int, n_tp: int,
     dev_of = r.idx // L
     loc_of = r.idx % L
     cap = _ceil_mult(cap_factor * T * K / n_ep)
-    flat_dev = dev_of.reshape(-1)
-    onehot = jax.nn.one_hot(flat_dev, n_ep, dtype=jnp.int32)
-    pos = jnp.cumsum(onehot, axis=0) - onehot
-    slot = jnp.take_along_axis(pos, flat_dev[:, None], axis=1)[:, 0]
-    slot = jnp.minimum(slot, cap)
-    x_rep = jnp.repeat(xt, K, axis=0)
-    send_x = jnp.zeros((n_ep, cap + 1, d), xt.dtype).at[flat_dev, slot].set(x_rep)[:, :cap]
-    send_e = jnp.full((n_ep, cap + 1), -1, jnp.int32).at[flat_dev, slot].set(
-        loc_of.reshape(-1))[:, :cap]
+    plan_dev = dispatch_mod.sort_dispatch(dev_of, n_groups=n_ep,
+                                          capacity=cap)
+    send_x = dispatch_mod.gather_rows(xt, plan_dev, cap, index_div=K)
+    send_e = dispatch_mod.gather_rows(loc_of.reshape(-1), plan_dev, cap,
+                                      fill=-1)
 
     # dispatch: AlltoAll over ep ...
     recv_x = jax.lax.all_to_all(send_x, "ep", 0, 0)
@@ -273,22 +292,19 @@ def _etp_body(wg, w1, w3, w2, x_loc, *, cfg, n_ep: int, n_tp: int,
     valid = re >= 0
     n_recv = rx.shape[0]
     c2 = _ceil_mult(local_cap_factor * n_recv / L)
-    oh2 = jax.nn.one_hot(jnp.where(valid, re, 0), L, dtype=jnp.int32)
-    oh2 = oh2 * valid[:, None].astype(jnp.int32)
-    pos2 = jnp.cumsum(oh2, axis=0) - oh2
-    slot2 = jnp.take_along_axis(pos2, jnp.maximum(re, 0)[:, None], axis=1)[:, 0]
-    slot2 = jnp.where(valid, jnp.minimum(slot2, c2), c2)
-    buf = jnp.zeros((L, c2 + 1, d), rx.dtype).at[jnp.maximum(re, 0), slot2].set(rx)[:, :c2]
+    plan_loc = dispatch_mod.sort_dispatch(jnp.where(valid, re, 0), valid,
+                                          n_groups=L, capacity=c2)
+    buf = dispatch_mod.gather_rows(rx, plan_loc, c2)
     out_buf = moe_mod.expert_ffn(w1, w3, w2, buf)     # partial over f/tp
-    out_buf = jnp.pad(out_buf, ((0, 0), (0, 1), (0, 0)))
-    out_tok = out_buf[jnp.maximum(re, 0), slot2] * valid[:, None].astype(rx.dtype)
+    out_tok = dispatch_mod.unpermute(out_buf, plan_loc)
+    out_tok = out_tok * valid[:, None].astype(rx.dtype)
     out_tok = out_tok.reshape(n_tp, n_ep, cap, d)
     # return: ReduceScatter over tp (sum partial FFN outputs, keep own shard)
     out_own = jax.lax.psum_scatter(out_tok, "tp", scatter_dimension=0,
                                    tiled=False)                  # (nev, cap, d)
     back = jax.lax.all_to_all(out_own, "ep", 0, 0)
     back = jnp.pad(back, ((0, 0), (0, 1), (0, 0)))
-    out_pair = back[flat_dev, slot]
+    out_pair = back[plan_dev.group, plan_dev.slot]
     w = r.combine.reshape(-1)
     y = (out_pair * w[:, None].astype(out_pair.dtype)).reshape(T, K, d).sum(1)
     return y.reshape(Bl, Sl, d).astype(x_loc.dtype)

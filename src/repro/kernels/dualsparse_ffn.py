@@ -73,23 +73,48 @@ def _kernel(counts_full_ref, counts_major_ref,   # tiny (E,) control arrays
 
 
 def grouped_swiglu_pallas(x, w1, w3, w2, counts_full=None, counts_major=None,
-                          *, block_c: int = 128, block_f: int = 128,
+                          *, p_factor: int = 1,
+                          n_minor_start: int | None = None,
+                          block_c: int = 128, block_f: int = 128,
                           interpret: bool = True):
     """See kernels.ref.grouped_swiglu_ref for semantics.
 
-    x: (E, C, d); w1/w3: (E, d, f); w2: (E, f, d) -> (E, C, d).
+    x: (E, C, d); w1/w3: (E*p_factor, d, f); w2: (E*p_factor, f, d)
+    -> (E, C, d).
+
+    ``p_factor > 1`` — **fused sub-expert mode**: the weights are a
+    partial-transformed layer (``core.partition``: sub-expert ``e*P + j``
+    holds neuron slice j of original expert e). The grid's f axis walks the
+    *virtual* concatenated width ``P*f`` of each original expert and the
+    BlockSpec index map picks the owning sub-expert's slice — the fused
+    full-width expert is reassembled by pure indexing, with zero weight
+    copies. Sub-expert 0 is the reconstructed MAJOR half, so
+    ``n_minor_start`` lands on the first sub-expert boundary and 2T-Drop's
+    MAJOR-only rows (``counts_major``) skip every tile of sub-experts 1..P-1.
+
+    ``n_minor_start`` — first neuron (virtual coordinate when fused) that
+    belongs to the MINOR half. Defaults: ``f // 2`` at ``p_factor == 1``
+    (pre-reconstructed full-width weights), the sub-expert width when fused.
+    Pass the full width explicitly to disable the minor-half split (e.g. the
+    S-ETP local buffers, where each group IS a single sub-expert and
+    ``counts_major`` only tracks the row-mode ordering).
+
     ``interpret=True`` executes the kernel body in Python on CPU (this
     container); on TPU pass interpret=False.
     """
     E, C, d = x.shape
-    f = w1.shape[-1]
+    Es, _, f = w1.shape
+    assert Es == E * p_factor, (
+        f"weights carry {Es} sub-experts; buffers have {E} groups x "
+        f"p_factor {p_factor}")
     if counts_full is None:
         counts_full = jnp.full((E,), C, jnp.int32)
     if counts_major is None:
         counts_major = jnp.zeros((E,), jnp.int32)
     block_c = min(block_c, C)
     block_f = min(block_f, f)
-    # pad C / f to block multiples
+    # pad C / per-sub-expert f to block multiples (padded neuron columns are
+    # zero in w1/w3 => silu(0)*0 == 0 contribution through zero w2 rows)
     pc, pf = (-C) % block_c, (-f) % block_f
     if pc:
         x = jnp.pad(x, ((0, 0), (0, pc), (0, 0)))
@@ -98,11 +123,18 @@ def grouped_swiglu_pallas(x, w1, w3, w2, counts_full=None, counts_major=None,
         w3 = jnp.pad(w3, ((0, 0), (0, 0), (0, pf)))
         w2 = jnp.pad(w2, ((0, 0), (0, pf), (0, 0)))
     Cp, fp = C + pc, f + pf
-    grid = (E, Cp // block_c, fp // block_f)
+    nf_sub = fp // block_f              # f-blocks per sub-expert
+    grid = (E, Cp // block_c, p_factor * nf_sub)
+
+    if n_minor_start is None:
+        if p_factor > 1:
+            n_minor_start = fp          # everything past sub-expert 0
+        else:
+            n_minor_start = f // 2 if f % 2 == 0 else f
 
     kernel = functools.partial(
         _kernel, block_c=block_c, block_f=block_f,
-        n_minor_start=f // 2 if f % 2 == 0 else f)
+        n_minor_start=n_minor_start)
 
     out = pl.pallas_call(
         kernel,
@@ -111,9 +143,15 @@ def grouped_swiglu_pallas(x, w1, w3, w2, counts_full=None, counts_major=None,
             pl.BlockSpec((E,), lambda e, c, f: (0,)),          # counts_full
             pl.BlockSpec((E,), lambda e, c, f: (0,)),          # counts_major
             pl.BlockSpec((1, block_c, d), lambda e, c, f: (e, c, 0)),
-            pl.BlockSpec((1, d, block_f), lambda e, c, f: (e, 0, f)),
-            pl.BlockSpec((1, d, block_f), lambda e, c, f: (e, 0, f)),
-            pl.BlockSpec((1, block_f, d), lambda e, c, f: (e, f, 0)),
+            pl.BlockSpec((1, d, block_f),
+                         lambda e, c, f: (e * p_factor + f // nf_sub, 0,
+                                          f % nf_sub)),
+            pl.BlockSpec((1, d, block_f),
+                         lambda e, c, f: (e * p_factor + f // nf_sub, 0,
+                                          f % nf_sub)),
+            pl.BlockSpec((1, block_f, d),
+                         lambda e, c, f: (e * p_factor + f // nf_sub,
+                                          f % nf_sub, 0)),
         ],
         out_specs=pl.BlockSpec((1, block_c, d), lambda e, c, f: (e, c, 0)),
         out_shape=jax.ShapeDtypeStruct((E, Cp, d), jnp.float32),

@@ -19,14 +19,21 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("block_c", "block_f"))
+@functools.partial(jax.jit, static_argnames=("p_factor", "n_minor_start",
+                                             "block_c", "block_f"))
 def grouped_swiglu(x, w1, w3, w2, counts_full=None, counts_major=None,
+                   p_factor: int = 1, n_minor_start=None,
                    block_c: int = 128, block_f: int = 128):
     """Grouped SwiGLU expert FFN (optionally with 2T-Drop counts).
 
-    x: (E, C, d) -> (E, C, d). See kernels.ref for exact semantics."""
+    x: (E, C, d) -> (E, C, d). ``p_factor > 1`` fuses partial-transformed
+    sub-expert weights back into full-width experts by BlockSpec indexing so
+    MAJOR-only rows skip the minor sub-experts' tiles; ``n_minor_start``
+    overrides the minor-half boundary (pass the full width to disable the
+    split). See kernels.ref / kernels.dualsparse_ffn for exact semantics."""
     return grouped_swiglu_pallas(
         x, w1, w3, w2, counts_full, counts_major,
+        p_factor=p_factor, n_minor_start=n_minor_start,
         block_c=block_c, block_f=block_f, interpret=not _on_tpu())
 
 

@@ -5,12 +5,14 @@ import jax
 import jax.numpy as jnp
 
 
-def grouped_swiglu_ref(x, w1, w3, w2, counts_full=None, counts_major=None):
+def grouped_swiglu_ref(x, w1, w3, w2, counts_full=None, counts_major=None,
+                       n_minor_start=None):
     """Grouped SwiGLU expert FFN with 2T-Drop row/neuron masking.
 
     x: (E, C, d) per-expert token buffers (rows beyond the valid count are
     padding). w1, w3: (E, d, f); w2: (E, f, d). Neuron layout after
-    reconstruction: [0, f/2) = MAJOR neurons, [f/2, f) = MINOR.
+    reconstruction: [0, n_minor_start) = MAJOR neurons, the rest MINOR
+    (``n_minor_start`` defaults to f/2; pass f to disable the split).
 
     Row semantics (tokens sorted by mode within each expert buffer):
       rows [0, counts_full[e])                       -> full expert
@@ -27,12 +29,14 @@ def grouped_swiglu_ref(x, w1, w3, w2, counts_full=None, counts_major=None):
         counts_major = jnp.zeros((E,), jnp.int32)
     if counts_major is None:
         counts_major = jnp.zeros((E,), jnp.int32)
+    if n_minor_start is None:
+        n_minor_start = f // 2
     full_ok = rows < counts_full[:, None]               # (E, C)
     any_ok = rows < (counts_full + counts_major)[:, None]
 
     h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, w1))
     h = h * jnp.einsum("ecd,edf->ecf", x, w3)
-    neuron_is_major = (jnp.arange(f) < f // 2)[None, None, :]
+    neuron_is_major = (jnp.arange(f) < n_minor_start)[None, None, :]
     row_mask = jnp.where(neuron_is_major, any_ok[..., None],
                          full_ok[..., None])
     h = h * row_mask.astype(h.dtype)

@@ -154,16 +154,18 @@ def _moe_forward(p, x, cfg, dist: Optional[DistContext], aux: bool = False):
 
     Returns ``(y, aux_loss, overflow)``: aux_loss is None unless ``aux``
     (training); overflow is the scalar count of token-expert pairs dropped
-    by dispatch-capacity overflow (0 on the setp/shard_map path, whose
-    capacities are per-device concerns)."""
+    by dispatch-capacity overflow (on the setp/shard_map path this is the
+    psum'd global count across device-level and local-expert seating)."""
     B, S, d = x.shape
     aux_val = None
     if aux:
         aux_val = moe_mod.aux_loss_for(p, x.reshape(-1, d), cfg)
     policy = _policy_of(dist)
     if dist is not None and dist.moe_impl == "setp":
-        y = setp_mod.setp_moe_forward(p, x, cfg, dist.mesh, policy=policy)
-        return y, aux_val, jnp.zeros((), jnp.int32)
+        y, overflow = setp_mod.setp_moe_forward(p, x, cfg, dist.mesh,
+                                                policy=policy,
+                                                return_overflow=True)
+        return y, aux_val, overflow
     xt = x.reshape(-1, d)
     # per-request/per-slot threshold leaves come in shaped (B,): expand them
     # to per-token so routing broadcasts over the flattened (B*S, d) block
@@ -174,7 +176,8 @@ def _moe_forward(p, x, cfg, dist: Optional[DistContext], aux: bool = False):
     y, overflow = moe_mod.moe_forward_dispatch(
         p, xt, cfg, pairs=pairs, capacity_factor=policy.capacity_factor,
         capacity=policy.dispatch_capacity(xt.shape[0]),
-        use_kernel=policy.use_kernel, return_overflow=True)
+        use_kernel=policy.use_kernel, return_overflow=True,
+        mode_grouped=policy.kernel_mode_grouping)
     return y.reshape(B, S, d), aux_val, overflow
 
 

@@ -572,8 +572,10 @@ class ContinuousBatchingEngine:
 
     @property
     def overflow_pairs(self) -> int:
-        """Total token-expert pairs silently dropped by dispatch-capacity
-        overflow since engine construction (0 under ``exact_moe``). The
+        """Total token-expert pairs silently dropped by capacity overflow
+        since engine construction (0 under ``exact_moe`` on the dispatch
+        path; a setp-backed engine now also counts its psum'd device-level
+        and local-expert overflow, which exact_moe does NOT pin). The
         counter rides in the decode cache, so reading it costs one scalar
         transfer — no per-step sync."""
         if isinstance(self._cache, dict) and "moe_overflow" in self._cache:
