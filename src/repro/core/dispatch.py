@@ -37,6 +37,7 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class DispatchPlan(NamedTuple):
@@ -159,6 +160,53 @@ def unpermute(out_buf, plan: DispatchPlan):
     padded = jnp.pad(out_buf, ((0, 0), (0, 1)) +
                      ((0, 0),) * (out_buf.ndim - 2))
     return padded[plan.group, plan.slot]
+
+
+def sorted_pair_arrays(plan: DispatchPlan, weights, *, index_div: int = 1,
+                       pad: int = 0):
+    """(tok_sorted, weight_sorted) for the fused Pallas MoE pipeline
+    (``kernels.dualsparse_ffn.fused_moe_pipeline_pallas``).
+
+    tok_sorted[i] is the source row (flat pair id // ``index_div``) of the
+    i-th SORTED pair position; weight_sorted[i] its combine weight (pass
+    ``combine * keep`` so dropped pairs carry weight 0). Both O(N) — the
+    only per-pair state the fused kernel needs, replacing the
+    (G, capacity, d) gathered buffer entirely. ``pad`` appends that many
+    (row 0, weight 0) entries so the kernel's final row-block slice stays
+    in range (pass its ``block_c``)."""
+    src = plan.perm // index_div if index_div > 1 else plan.perm
+    w = weights.reshape(-1)[plan.perm]
+    if pad:
+        src = jnp.pad(src, (0, pad))
+        w = jnp.pad(w, (0, pad))
+    return src.astype(jnp.int32), w
+
+
+def prefer_cumsum_dispatch(n_pairs: int, n_groups: int,
+                           backend: Optional[str] = None) -> bool:
+    """Per-shape dispatch heuristic (ROADMAP): the sort substrate wins
+    almost everywhere, but on CPU the dense one-hot cumsum is still faster
+    for FEW groups at LARGE pair counts — O(N*G) with G<=8 is one cheap
+    vectorized pass, while a stable argsort of ~1e4+ keys pays its
+    O(N log N) in scalar compares (BENCH_dispatch.json: T=1024..4096/E=8
+    runs 0.68-0.86x). Both build bit-identical plans, so the choice is pure
+    performance. TPU/GPU always sort (the dense one-hot is an (N, G)
+    HBM-traffic bomb there)."""
+    if backend is None:
+        backend = jax.default_backend()
+    return backend == "cpu" and n_groups <= 8 and n_pairs >= 8192
+
+
+def dispatch_plan(group, keep=None, *, n_groups: int, capacity: int,
+                  major_only=None, backend: Optional[str] = None
+                  ) -> DispatchPlan:
+    """Shape-dispatched planner: ``sort_dispatch`` or ``cumsum_dispatch``
+    by ``prefer_cumsum_dispatch`` — bit-identical output either way."""
+    n_pairs = int(np.prod(group.shape))
+    fn = cumsum_dispatch if prefer_cumsum_dispatch(n_pairs, n_groups,
+                                                   backend) else sort_dispatch
+    return fn(group, keep, n_groups=n_groups, capacity=capacity,
+              major_only=major_only)
 
 
 # ---------------------------------------------------------------------------

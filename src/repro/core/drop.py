@@ -4,9 +4,15 @@
 2T-Drop: with each original expert partitioned+reconstructed into a MAJOR
 and MINOR sub-expert (partial transformation, P=2):
 
-    score <  T²_major                -> drop both halves      (mode 0)
-    T²_major <= score < T²_minor     -> compute major only    (mode 1)
-    score >= T²_minor                -> compute both halves   (mode 2)
+    score <= T²_major                -> drop both halves      (mode 0)
+    T²_major < score <= T²_minor     -> compute major only    (mode 1)
+    score >  T²_minor                -> compute both halves   (mode 2)
+
+Both comparisons are strict ``>`` keeps, matching 1T-Drop's boundary
+(``one_t_keep``: retain scores *exceeding* T¹), so setting
+T²_major == T²_minor == T¹ degenerates 2T-Drop to 1T-Drop exactly —
+including at score == T¹ — and ``threshold_to_drop_rate`` (which counts
+``score <= t`` as dropped) is consistent with both.
 
 Defaults (paper §4.2): T²_major = T¹ - 0.01, T²_minor = T¹ + 0.01.
 All decisions are pure functions of the routing — fixed shapes, jit-safe.
@@ -30,13 +36,15 @@ def one_t_keep(norm_score, t_drop):
 
 def two_t_modes(norm_score, t_major, t_minor):
     """(T,K) int32 modes per original token-expert pair. Thresholds may be
-    scalar, per-token (T,), or per-pair (T,K) — e.g. load-aware."""
+    scalar, per-token (T,), or per-pair (T,K) — e.g. load-aware. Both
+    boundaries are strict ``>`` keeps (see module docstring) so
+    t_major == t_minor reduces to ``one_t_keep`` bit for bit."""
     t_major = jnp.asarray(t_major)
     t_minor = jnp.asarray(t_minor)
     if jnp.ndim(t_major) == 1:
         t_major = t_major[:, None]
         t_minor = t_minor[:, None]
-    full = norm_score >= t_minor
+    full = norm_score > t_minor
     major = norm_score > t_major
     return jnp.where(full, MODE_FULL, jnp.where(major, MODE_MAJOR, MODE_DROP))
 

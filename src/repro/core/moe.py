@@ -154,7 +154,7 @@ def dispatch_indices(pairs: SubExpertPairs, n_experts: int, capacity: int):
     count of KEPT pairs silently discarded because their expert's capacity
     was exhausted — the quantity a deployment must watch (an overflow drop
     is an accuracy loss the drop policy never sanctioned)."""
-    plan = dispatch_mod.sort_dispatch(pairs.idx, pairs.keep,
+    plan = dispatch_mod.dispatch_plan(pairs.idx, pairs.keep,
                                       n_groups=n_experts, capacity=capacity)
     return plan.group, plan.slot, plan.overflow
 
@@ -167,19 +167,34 @@ def _pairs_partition_p(pairs: SubExpertPairs) -> int:
     return Kp // K if K and Kp % K == 0 else 1
 
 
+def _sub_pair_overflow(plan, pairs: SubExpertPairs, fused, capacity: int):
+    """Capacity-overflow drops of an ORIGINAL-expert (fused) plan counted in
+    the canonical unit: SUB-expert pairs. A fused row stands for every kept
+    half of its original pair (P when FULL, 1 when MAJOR-only), so counting
+    overflowed fused rows 1:1 — as this path used to — under-reports by up
+    to P-1 sub-pairs per drop and is incomparable with the sub-pair dispatch
+    path and ``_setp_body`` (``engine.overflow_pairs`` mixes units)."""
+    T, K = fused.group.shape
+    p = pairs.idx.shape[1] // K
+    kept_halves = pairs.keep.reshape(T, K, p).sum(-1).astype(jnp.int32)
+    overflowed = fused.keep.reshape(-1) & (plan.slot.reshape(-1) >= capacity)
+    return jnp.sum(jnp.where(overflowed, kept_halves.reshape(-1), 0))
+
+
 def _fused_kernel_dispatch(params, x, cfg, pairs: SubExpertPairs, p: int,
                            capacity: int):
     """Original-expert-granularity dispatch for the dual-sparse kernel: one
     row per (token, ORIGINAL expert) pair — halving dispatched pairs at P=2
     — mode-ordered FULL-first/MAJOR-only-second, with ``counts_major``
     driving the kernel's minor-half tile skipping (paper §4.2). Exact
-    w.r.t. the sub-expert path under partial transformation (Eq. 13)."""
+    w.r.t. the sub-expert path under partial transformation (Eq. 13).
+    Overflow is reported in SUB-pair units (see ``_sub_pair_overflow``)."""
     from ..kernels import ops as kops
     T, d = x.shape
     E = params["w1"].shape[0] // p
     fused = dispatch_mod.fuse_sub_pairs(pairs, p)
     K = fused.group.shape[1]
-    plan = dispatch_mod.sort_dispatch(fused.group, fused.keep,
+    plan = dispatch_mod.dispatch_plan(fused.group, fused.keep,
                                       n_groups=E, capacity=capacity,
                                       major_only=fused.major_only)
     buf = dispatch_mod.gather_rows(x, plan, capacity, index_div=K)
@@ -190,7 +205,59 @@ def _fused_kernel_dispatch(params, x, cfg, pairs: SubExpertPairs, p: int,
     gathered = dispatch_mod.unpermute(out_buf, plan)            # (T*K, d)
     w = (fused.combine * fused.keep.astype(fused.combine.dtype)).reshape(-1)
     y = (gathered * w[:, None].astype(gathered.dtype))
-    return y.reshape(T, K, d).sum(axis=1), plan.overflow
+    overflow = _sub_pair_overflow(plan, pairs, fused, capacity)
+    return y.reshape(T, K, d).sum(axis=1), overflow
+
+
+def _fused_pipeline_block(block_c: int, capacity: int) -> int:
+    return min(block_c, capacity)
+
+
+def _fused_pipeline_dispatch(params, x, cfg, pairs: SubExpertPairs, p: int,
+                             capacity: int, mode_grouped: bool,
+                             block_c: int = 128, block_f: int = 128):
+    """The single fused Pallas pipeline (ROADMAP item 4): the kernel
+    consumes the DispatchPlan directly — sort permutation + segment counts
+    — gathering token rows from the flat (T, d) array, running the
+    mode-ordered grouped SwiGLU with minor-half tile skipping, and
+    scatter-accumulating combine-weighted outputs per token. Eliminates
+    both HBM round-trips of the buffer path (the gather-built
+    (E, capacity, d) buffer the kernel re-reads, and the unpermute
+    read-back); that path remains as the bit-exactness oracle.
+
+    ``mode_grouped`` (P > 1): one row per ORIGINAL pair, weights fused at
+    kernel level via ``p_factor`` BlockSpec indexing. Otherwise rows are
+    sub-expert pairs against the weights' native expert axis. Overflow is
+    reported in SUB-pair units on both layouts."""
+    from ..kernels import ops as kops
+    T, d = x.shape
+    bc = _fused_pipeline_block(block_c, capacity)
+    if mode_grouped and p > 1:
+        E = params["w1"].shape[0] // p
+        fused = dispatch_mod.fuse_sub_pairs(pairs, p)
+        K = fused.group.shape[1]
+        plan = dispatch_mod.dispatch_plan(fused.group, fused.keep,
+                                          n_groups=E, capacity=capacity,
+                                          major_only=fused.major_only)
+        w = fused.combine * fused.keep.astype(fused.combine.dtype)
+        overflow = _sub_pair_overflow(plan, pairs, fused, capacity)
+        p_factor, n_minor_start = p, None
+    else:
+        E = params["w1"].shape[0]
+        K = pairs.idx.shape[1]
+        plan = dispatch_mod.dispatch_plan(pairs.idx, pairs.keep,
+                                          n_groups=E, capacity=capacity)
+        w = pairs.combine * pairs.keep.astype(pairs.combine.dtype)
+        overflow = plan.overflow
+        p_factor, n_minor_start = 1, params["w1"].shape[-1]
+    tok_sorted, w_sorted = dispatch_mod.sorted_pair_arrays(
+        plan, w, index_div=K, pad=bc)
+    cf, cm = plan.kernel_counts(capacity)
+    y = kops.fused_moe_pipeline(
+        x, params["w1"], params["w3"], params["w2"], plan.group_offsets,
+        cf, cm, tok_sorted, w_sorted, capacity=capacity, p_factor=p_factor,
+        n_minor_start=n_minor_start, block_c=block_c, block_f=block_f)
+    return y, overflow
 
 
 def moe_forward_dispatch(params, x, cfg, pairs: Optional[SubExpertPairs] = None,
@@ -198,7 +265,8 @@ def moe_forward_dispatch(params, x, cfg, pairs: Optional[SubExpertPairs] = None,
                          capacity: Optional[int] = None,
                          use_kernel: bool = False,
                          return_overflow: bool = False,
-                         mode_grouped: bool = False):
+                         mode_grouped: bool = False,
+                         fused_pipeline: bool = False):
     """Sort-based gather -> batched expert GEMM -> gather back. Exact w.r.t.
     the reference whenever no token exceeds capacity.
 
@@ -216,8 +284,15 @@ def moe_forward_dispatch(params, x, cfg, pairs: Optional[SubExpertPairs] = None,
     *dispatched* pairs: the minor sub-expert of a mode-1 token is simply
     never dispatched).
 
+    ``fused_pipeline`` (``SparsityPolicy.fused_pipeline`` supplies it in
+    production) routes through the single fused Pallas kernel — dispatch
+    gather, grouped SwiGLU, and weighted combine in one launch, with no
+    (E, capacity, d) HBM buffer and no unpermute read-back. The buffer path
+    below stays as its bit-exactness oracle.
+
     ``return_overflow``: also return the scalar count of kept pairs dropped
-    by capacity overflow (see ``dispatch_indices``).
+    by capacity overflow (see ``dispatch_indices``). Always in sub-pair
+    units, on every path.
     """
     T, d = x.shape
     E = params["w1"].shape[0]
@@ -228,13 +303,20 @@ def moe_forward_dispatch(params, x, cfg, pairs: Optional[SubExpertPairs] = None,
         capacity = capacity_for(T, K, E, capacity_factor)
 
     p = _pairs_partition_p(pairs)
+    if fused_pipeline:
+        y, overflow = _fused_pipeline_dispatch(
+            params, x, cfg, pairs, p, capacity,
+            mode_grouped=mode_grouped and p > 1)
+        out = y.astype(x.dtype) + _shared_out(params, x)
+        return (out, overflow) if return_overflow else out
+
     if use_kernel and mode_grouped and p > 1:
         y, overflow = _fused_kernel_dispatch(params, x, cfg, pairs, p,
                                              capacity)
         out = y.astype(x.dtype) + _shared_out(params, x)
         return (out, overflow) if return_overflow else out
 
-    plan = dispatch_mod.sort_dispatch(pairs.idx, pairs.keep,
+    plan = dispatch_mod.dispatch_plan(pairs.idx, pairs.keep,
                                       n_groups=E, capacity=capacity)
     buf = dispatch_mod.gather_rows(x, plan, capacity, index_div=K)
 

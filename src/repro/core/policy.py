@@ -91,6 +91,9 @@ class SparsityPolicy:
     reconstruction: bool = True     # reorder neurons before partition
     # --- execution hints (static) ---
     use_kernel: bool = False        # Pallas grouped kernel on expert GEMMs
+    fused_pipeline: bool = False    # single fused Pallas dispatch->FFN->
+    #                                 combine kernel (no (E, C, d) HBM
+    #                                 buffer, no unpermute read-back)
     capacity_factor: float = 2.0    # dispatch-path expert capacity factor
     exact_capacity: bool = False    # capacity = T: no overflow drop ever,
     #                                 so MoE outputs are batch-invariant
@@ -289,8 +292,11 @@ class TwoTDrop(SparsityPolicy):
 
     def sub_pair_keep(self, score, is_major, sub_idx, cfg, *, n_dev=1,
                       loads=None, thresholds=None):
+        # strict > on BOTH thresholds (matching one_t_keep's boundary), so
+        # t_major == t_minor degenerates 2T -> 1T exactly, incl. at the
+        # boundary score.
         return jnp.where(is_major, score > _bt(self.t_major, score),
-                         score >= _bt(self.t_minor, score))
+                         score > _bt(self.t_minor, score))
 
     def _calibrated(self, wg_stack, cfg, calib_x, delta: float = 0.05):
         if self.drop_target is None:
@@ -360,7 +366,7 @@ class LoadAwareTwoT(SparsityPolicy):
         t1 = self._t1(score, loads, sub_idx % n_dev)   # strided placement
         gap = _bt(self.t_gap, score)
         return jnp.where(is_major, score > jnp.maximum(t1 - gap, 0.0),
-                         score >= t1 + gap)
+                         score > t1 + gap)
 
     @classmethod
     def from_config(cls, ds, drop_target=None, **kw):
@@ -414,7 +420,7 @@ class PerLayerCalibrated2T(SparsityPolicy):
     def sub_pair_keep(self, score, is_major, sub_idx, cfg, *, n_dev=1,
                       loads=None, thresholds=None):
         tm, tn = self._layer_thresholds(thresholds=thresholds)
-        return jnp.where(is_major, score > tm, score >= tn)
+        return jnp.where(is_major, score > tm, score > tn)
 
     @classmethod
     def from_config(cls, ds, drop_target=None, **kw):

@@ -82,7 +82,8 @@ def _ceil_mult(x: float, m: int = 8) -> int:
 def _setp_body(wg, w1, w3, w2, x_loc, *, cfg, n_dev: int, axis: str,
                token_axes: tuple, policy, thresholds=None,
                cap_factor: float, local_cap_factor: float,
-               cap_multiple: int = 8, wire_dtype=jnp.bfloat16):
+               cap_multiple: int = 8, wire_dtype=jnp.bfloat16,
+               tokens_on_axis: bool = True):
     """Per-device S-ETP MoE. x_loc: (B_l, S_l, d). Experts already
     partial-transformed (E*P sub-experts when ``policy.partition_p > 1``)
     and strided-placed; this device holds w1/w3/w2 slices of L = E*P/D
@@ -121,10 +122,15 @@ def _setp_body(wg, w1, w3, w2, x_loc, *, cfg, n_dev: int, axis: str,
     loads = None
     if policy.needs_loads:
         # pre-drop load histogram per EP device — one psum (O(N) segment
-        # histogram; no dense one-hot)
+        # histogram; no dense one-hot). Sum over the expert axis ONLY when
+        # tokens are actually sharded over it (prefill/train); on decode
+        # steps (S == 1) the token block is REPLICATED over the expert axis,
+        # and psum'ing the identical per-device histograms would multiply
+        # every load by n_dev — skewing load-aware thresholds toward
+        # uniform-looking (capped) ratios.
         loads = dispatch_mod.group_histogram(dev_of, n_dev,
                                              dtype=jnp.float32)
-        for ax in token_axes + (axis,):
+        for ax in token_axes + ((axis,) if tokens_on_axis else ()):
             loads = jax.lax.psum(loads, ax)
     keep = policy.sub_pair_keep(score, is_major, sub_idx, cfg, n_dev=n_dev,
                                 loads=loads, thresholds=thresholds)
@@ -159,21 +165,37 @@ def _setp_body(wg, w1, w3, w2, x_loc, *, cfg, n_dev: int, axis: str,
     c2 = _ceil_mult(local_cap_factor * n_dev * cap / L, cap_multiple)
     plan_loc = dispatch_mod.sort_dispatch(loc, valid, n_groups=L,
                                           capacity=c2, major_only=mfl)
-    buf = dispatch_mod.gather_rows(rx, plan_loc, c2)
-    if use_kernel:
+    if getattr(policy, "fused_pipeline", False):
+        # single fused Pallas pipeline: the kernel gathers received rows
+        # straight through plan_loc.perm, runs the grouped SwiGLU, and
+        # scatters back per received row — no (L, c2, d) buffer, no
+        # unpermute. Validity rides as the combine weight (1 kept / 0 pad),
+        # replacing the ``* valid`` mask of the buffer path.
         from ..kernels import ops as kops
         cf, cm = plan_loc.kernel_counts(c2)
-        # each local group IS one sub-expert (the halves of an original
-        # expert live on different devices — that is the S-ETP split), so
-        # no minor-half neuron region exists locally: counts_major tracks
-        # the mode ordering and pads tile-skip row validity only.
-        out_buf = kops.grouped_swiglu(buf, w1, w3, w2, counts_full=cf,
-                                      counts_major=cm,
-                                      n_minor_start=w1.shape[-1])
+        bc = min(128, c2)
+        tok_s, w_s = dispatch_mod.sorted_pair_arrays(
+            plan_loc, valid.astype(jnp.float32), pad=bc)
+        out_tok = kops.fused_moe_pipeline(
+            rx, w1, w3, w2, plan_loc.group_offsets, cf, cm, tok_s, w_s,
+            capacity=c2, n_minor_start=w1.shape[-1],
+            block_c=bc).astype(wire_dtype)
     else:
-        out_buf = moe_mod.expert_ffn(w1, w3, w2, buf)
-    out_tok = dispatch_mod.unpermute(out_buf, plan_loc).astype(wire_dtype)
-    out_tok = out_tok * valid[:, None].astype(out_tok.dtype)
+        buf = dispatch_mod.gather_rows(rx, plan_loc, c2)
+        if use_kernel:
+            from ..kernels import ops as kops
+            cf, cm = plan_loc.kernel_counts(c2)
+            # each local group IS one sub-expert (the halves of an original
+            # expert live on different devices — that is the S-ETP split),
+            # so no minor-half neuron region exists locally: counts_major
+            # tracks the mode ordering and pads tile-skip row validity only.
+            out_buf = kops.grouped_swiglu(buf, w1, w3, w2, counts_full=cf,
+                                          counts_major=cm,
+                                          n_minor_start=w1.shape[-1])
+        else:
+            out_buf = moe_mod.expert_ffn(w1, w3, w2, buf)
+        out_tok = dispatch_mod.unpermute(out_buf, plan_loc).astype(wire_dtype)
+        out_tok = out_tok * valid[:, None].astype(out_tok.dtype)
 
     # --- return AlltoAll + combine on the source device ---
     back = jax.lax.all_to_all(out_tok.reshape(n_dev, cap, d), axis, 0, 0)
@@ -188,6 +210,18 @@ def _setp_body(wg, w1, w3, w2, x_loc, *, cfg, n_dev: int, axis: str,
     for ax in token_axes + (axis,):
         overflow = jax.lax.psum(overflow, ax)
     return y.reshape(Bl, Sl, d).astype(x_loc.dtype), overflow
+
+
+def _spec_uses_axis(spec, axis: str) -> bool:
+    """Whether a PartitionSpec shards any dimension over ``axis`` — i.e.
+    whether the per-shard token block is a distinct slice along it (vs
+    replicated, as on decode steps)."""
+    for entry in spec:
+        if entry == axis:
+            return True
+        if isinstance(entry, (tuple, list)) and axis in entry:
+            return True
+    return False
 
 
 def setp_moe_forward(params: Dict, x, cfg, mesh: Mesh, *,
@@ -225,7 +259,8 @@ def setp_moe_forward(params: Dict, x, cfg, mesh: Mesh, *,
         _setp_body, cfg=cfg, n_dev=n_dev, axis=expert_axis,
         token_axes=token_axes, policy=policy,
         cap_factor=cap_factor, local_cap_factor=local_cap_factor,
-        cap_multiple=cap_multiple, wire_dtype=wire_dtype)
+        cap_multiple=cap_multiple, wire_dtype=wire_dtype,
+        tokens_on_axis=_spec_uses_axis(x_spec, expert_axis))
 
     # per-layer calibrated thresholds ride through the shard_map replicated
     has_th = "thresholds" in params

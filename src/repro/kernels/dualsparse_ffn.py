@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(counts_full_ref, counts_major_ref,   # tiny (E,) control arrays
@@ -159,3 +160,180 @@ def grouped_swiglu_pallas(x, w1, w3, w2, counts_full=None, counts_major=None,
     )(counts_full.astype(jnp.int32), counts_major.astype(jnp.int32),
       x, w1, w3, w2)
     return out[:, :C].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fused dispatch -> expert FFN -> combine pipeline (ROADMAP item 4)
+# ---------------------------------------------------------------------------
+
+def _fused_pipeline_kernel(offs_ref, cf_ref, cm_ref,      # (E,) control
+                           tok_ref, wc_ref,               # (N_pad,) pair maps
+                           x_ref, w1_ref, w3_ref, w2_ref, out_ref,
+                           x_scr, acc_scr, *,
+                           block_c: int, block_f: int, n_minor_start: int,
+                           n_f: int):
+    """One grid step = one (expert, row-block, neuron-block) tile.
+
+    Instead of reading a pre-gathered (E, capacity, d) buffer, the kernel
+    walks the sort permutation directly: the row block's sorted positions
+    are ``offs[e] + row0 .. + block_c`` (contiguous by construction of
+    ``DispatchPlan.perm``), ``tok_ref`` maps each sorted position to its
+    source row of the flat (T, d) activation array, and ``wc_ref`` carries
+    the pair's combine weight. Token rows are gathered once per row block
+    (at f == 0) into VMEM scratch, the mode-ordered grouped SwiGLU runs
+    with the same minor-half tile skipping as ``_kernel``, and the
+    combine-weighted output rows are scatter-accumulated straight into the
+    (T, d) output — no capacity buffer, no unpermute read-back.
+    """
+    e = pl.program_id(0)
+    c = pl.program_id(1)
+    f = pl.program_id(2)
+
+    cf = cf_ref[e]
+    cm = cm_ref[e]
+    row0 = c * block_c
+    any_rows = row0 < cf + cm                     # some row needs SOME tile
+    has_major = f * block_f < n_minor_start
+    live = row0 < jnp.where(has_major, cf + cm, cf)
+    start = offs_ref[e] + row0
+
+    @pl.when((e == 0) & (c == 0) & (f == 0))
+    def _init_out():
+        out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+
+    @pl.when((f == 0) & any_rows)
+    def _gather():
+        acc_scr[...] = jnp.zeros(acc_scr.shape, acc_scr.dtype)
+
+        def body(j, _):
+            tok = tok_ref[start + j]
+            x_scr[pl.ds(j, 1), :] = x_ref[pl.ds(tok, 1), :]
+            return 0
+        jax.lax.fori_loop(0, block_c, body, 0)
+
+    @pl.when(live)
+    def _compute():
+        x = x_scr[...]                                 # (block_c, d)
+        w1 = w1_ref[0]                                 # (d, block_f)
+        w3 = w3_ref[0]
+        w2 = w2_ref[0]                                 # (block_f, d)
+        h = jax.nn.silu(jnp.dot(x, w1, preferred_element_type=jnp.float32))
+        h = h * jnp.dot(x, w3, preferred_element_type=jnp.float32)
+        rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (block_c, 1), 0)
+        nids = f * block_f + jax.lax.broadcasted_iota(jnp.int32, (1, block_f), 1)
+        valid_rows = jnp.where(nids < n_minor_start, cf + cm, cf)  # (1, bf)
+        h = jnp.where(rows < valid_rows, h, 0.0)
+        acc_scr[...] += jnp.dot(h.astype(w2.dtype), w2,
+                                preferred_element_type=jnp.float32)
+
+    @pl.when((f == n_f - 1) & any_rows)
+    def _scatter():
+        def body(j, _):
+            tok = tok_ref[start + j]
+            w = jnp.where(row0 + j < cf + cm, wc_ref[start + j], 0.0)
+            out_ref[pl.ds(tok, 1), :] += \
+                w * acc_scr[pl.ds(j, 1), :].astype(out_ref.dtype)
+            return 0
+        jax.lax.fori_loop(0, block_c, body, 0)
+
+
+def fused_moe_pipeline_pallas(x, w1, w3, w2, group_offsets, counts_full,
+                              counts_major, tok_sorted, combine_sorted, *,
+                              capacity: int, p_factor: int = 1,
+                              n_minor_start: int | None = None,
+                              block_c: int = 128, block_f: int = 128,
+                              interpret: bool = True):
+    """Fused dispatch -> grouped SwiGLU -> weighted combine (one kernel).
+
+    x: (T, d) flat token activations; w1/w3: (E*p_factor, d, f);
+    w2: (E*p_factor, f, d) -> (T, d).
+
+    ``group_offsets``/``counts_full``/``counts_major``: (E,) from a
+    ``DispatchPlan`` (counts already clamped to ``capacity``, see
+    ``DispatchPlan.kernel_counts``). ``tok_sorted``: (N',) source row of
+    the flat activation array per SORTED pair position (``plan.perm``
+    divided by the pair fan-out); ``combine_sorted``: (N',) combine weight
+    (zero for dropped pairs) in the same order. Both must be padded with
+    ``block_c`` trailing entries (token 0, weight 0) so the final row
+    block's slice stays in range — ``core.dispatch.sorted_pair_arrays``
+    builds them.
+
+    Semantics match the three-step oracle
+    ``gather_rows -> grouped_swiglu -> unpermute + combine`` to fp
+    tolerance: the same rows are computed (capacity clamping included) and
+    each kept pair contributes ``combine * f_e(x_tok)`` to its token's
+    output row; only the float accumulation order differs.
+
+    ``p_factor`` / ``n_minor_start`` follow ``grouped_swiglu_pallas``: the
+    f axis walks the virtual concatenated width of partitioned sub-expert
+    weights and MAJOR-only rows skip every minor-half tile.
+
+    The (T, d) activation/output arrays are whole-array blocks resident for
+    the kernel's duration, and the per-pair maps are read at dynamic
+    indices — on a real TPU the maps belong in SMEM via scalar prefetch and
+    x/out in ANY memory space with explicit DMA; ``interpret=True``
+    (this container) validates the exact block/skip/scatter logic on CPU.
+    """
+    T, d = x.shape
+    Es, _, f = w1.shape
+    E = group_offsets.shape[0]
+    assert Es == E * p_factor, (
+        f"weights carry {Es} sub-experts; plan has {E} groups x "
+        f"p_factor {p_factor}")
+    assert capacity >= 1
+    block_c = min(block_c, capacity)
+    block_f = min(block_f, f)
+    pc, pf = (-capacity) % block_c, (-f) % block_f
+    if pf:
+        w1 = jnp.pad(w1, ((0, 0), (0, 0), (0, pf)))
+        w3 = jnp.pad(w3, ((0, 0), (0, 0), (0, pf)))
+        w2 = jnp.pad(w2, ((0, 0), (0, pf), (0, 0)))
+    Cp, fp = capacity + pc, f + pf
+    nf_sub = fp // block_f
+    n_f = p_factor * nf_sub
+    grid = (E, Cp // block_c, n_f)
+
+    if n_minor_start is None:
+        if p_factor > 1:
+            n_minor_start = fp          # everything past sub-expert 0
+        else:
+            n_minor_start = f // 2 if f % 2 == 0 else f
+
+    assert tok_sorted.shape == combine_sorted.shape
+    Np = tok_sorted.shape[0]
+
+    kernel = functools.partial(
+        _fused_pipeline_kernel, block_c=block_c, block_f=block_f,
+        n_minor_start=n_minor_start, n_f=n_f)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((E,), lambda e, c, f: (0,)),        # group_offsets
+            pl.BlockSpec((E,), lambda e, c, f: (0,)),        # counts_full
+            pl.BlockSpec((E,), lambda e, c, f: (0,)),        # counts_major
+            pl.BlockSpec((Np,), lambda e, c, f: (0,)),       # tok_sorted
+            pl.BlockSpec((Np,), lambda e, c, f: (0,)),       # combine_sorted
+            pl.BlockSpec((T, d), lambda e, c, f: (0, 0)),    # x (whole)
+            pl.BlockSpec((1, d, block_f),
+                         lambda e, c, f: (e * p_factor + f // nf_sub, 0,
+                                          f % nf_sub)),
+            pl.BlockSpec((1, d, block_f),
+                         lambda e, c, f: (e * p_factor + f // nf_sub, 0,
+                                          f % nf_sub)),
+            pl.BlockSpec((1, block_f, d),
+                         lambda e, c, f: (e * p_factor + f // nf_sub,
+                                          f % nf_sub, 0)),
+        ],
+        out_specs=pl.BlockSpec((T, d), lambda e, c, f: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_c, d), x.dtype),               # gathered rows
+            pltpu.VMEM((block_c, d), jnp.float32),           # output accum
+        ],
+        interpret=interpret,
+    )(group_offsets.astype(jnp.int32), counts_full.astype(jnp.int32),
+      counts_major.astype(jnp.int32), tok_sorted.astype(jnp.int32),
+      combine_sorted.astype(jnp.float32), x, w1, w3, w2)
+    return out.astype(x.dtype)

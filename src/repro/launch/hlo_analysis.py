@@ -221,6 +221,36 @@ def analyze_hlo(hlo: str) -> ModuleCosts:
     return costs
 
 
+def count_shape_instructions(hlo: str, dims, dtype: Optional[str] = None,
+                             exclude_ops=("parameter",)) -> int:
+    """Count HLO instructions (across ALL computations, fusion bodies
+    included) whose RESULT contains an array of exactly ``dims``
+    (optionally also matching ``dtype``, e.g. "f32").
+
+    This is the robust form of "was a buffer of this shape materialized?":
+    byte totals shift with unrelated lowering choices, but an
+    (E, capacity, d) intermediate can only appear in the module if some
+    instruction actually produces it — the assertion
+    ``bench_moe_pipeline.py`` runs against the fused MoE path."""
+    target = [int(d) for d in dims]
+    n = 0
+    for line in hlo.splitlines():
+        m = _LINE_RE.match(line)
+        if not m:
+            continue
+        _, shape_str, op, _ = m.groups()
+        if op in exclude_ops:
+            continue
+        for sm in _SHAPE_RE.finditer(shape_str):
+            if dtype is not None and sm.group(1) != dtype:
+                continue
+            got = [int(d) for d in sm.group(2).split(",") if d]
+            if got == target:
+                n += 1
+                break
+    return n
+
+
 # Backwards-compatible helpers -------------------------------------------------
 
 @dataclass

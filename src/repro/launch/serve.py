@@ -53,6 +53,10 @@ def main():
                          "synthetic calibration activations")
     ap.add_argument("--dualsparse", action="store_true",
                     help="DEPRECATED alias for --policy 2t")
+    ap.add_argument("--fused-pipeline", action="store_true",
+                    help="run MoE layers through the single fused Pallas "
+                         "dispatch->FFN->combine kernel (no (E, C, d) HBM "
+                         "buffer, no unpermute read-back)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -71,7 +75,8 @@ def main():
     dist = None
     if policy_name != "none" and cfg.is_moe and cfg.dualsparse.enabled:
         policy = make_policy(policy_name, cfg.dualsparse,
-                             drop_target=args.drop_target)
+                             drop_target=args.drop_target,
+                             fused_pipeline=args.fused_pipeline)
         calib = calibration_activations(jax.random.PRNGKey(7), 512,
                                         cfg.d_model)
         params, policy = policy.prepare(params, cfg, calib)

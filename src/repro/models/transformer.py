@@ -177,7 +177,8 @@ def _moe_forward(p, x, cfg, dist: Optional[DistContext], aux: bool = False):
         p, xt, cfg, pairs=pairs, capacity_factor=policy.capacity_factor,
         capacity=policy.dispatch_capacity(xt.shape[0]),
         use_kernel=policy.use_kernel, return_overflow=True,
-        mode_grouped=policy.kernel_mode_grouping)
+        mode_grouped=policy.kernel_mode_grouping,
+        fused_pipeline=getattr(policy, "fused_pipeline", False))
     return y.reshape(B, S, d), aux_val, overflow
 
 

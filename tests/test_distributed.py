@@ -62,6 +62,18 @@ def test_distributed_train_step_runs():
     assert res["loss1"] < res["loss0"] * 1.2  # it trains (or at least moves)
 
 
+def test_decode_loads_not_double_counted():
+    """Regression: on a decode step (S==1) the token block is replicated
+    over the expert axis, and the loads psum must NOT sum the n_dev
+    identical copies — each token counts once, matching the prefill path."""
+    out = run_prog("loads_decode_check.py")
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["decode_loads_once"], res
+    assert res["prefill_loads_once"], res
+    assert res["decode_matches_prefill"], res
+    assert res["finite"], res
+
+
 def test_distributed_dualsparse_serving():
     """Engine + S-ETP + 2T-Drop + load-aware thresholding on 8 devices."""
     out = run_prog("serve_dist_check.py")

@@ -20,16 +20,53 @@ def test_one_t_monotone_in_threshold(rng):
 
 
 def test_two_t_equal_thresholds_is_one_t(rng):
-    """Paper Table 2 note: T2_major == T2_minor degenerates to 1T-Drop."""
-    s = jax.random.uniform(rng, (64, 8))
+    """Paper Table 2 note: T2_major == T2_minor degenerates to 1T-Drop —
+    EXACTLY, including at score == T. The scores here contain the
+    threshold value itself to pin the boundary: 1T keeps strictly-above
+    (``one_t_keep``: score > t), so degenerate 2T must too."""
     t = 0.12
+    s = jax.random.uniform(rng, (64, 8))
+    s = s.at[0, 0].set(t)                    # exact boundary score
     modes = drop.two_t_modes(s, t, t)
     keep1 = drop.one_t_keep(s, t)
-    # full where kept by 1T (score >= t means >= t_minor -> full)
     np.testing.assert_array_equal(np.asarray(modes == drop.MODE_FULL),
-                                  np.asarray(s >= t))
-    # nothing is in major-only mode except scores exactly in [t, t) = empty
-    assert not bool(((modes == drop.MODE_MAJOR) & ~keep1 & (s < t)).any())
+                                  np.asarray(keep1))
+    # the degenerate band (t, t] is empty: no pair may sit in MAJOR-only
+    assert not bool((modes == drop.MODE_MAJOR).any())
+    # boundary score drops on both paths
+    assert int(modes[0, 0]) == drop.MODE_DROP
+    assert not bool(keep1[0, 0])
+
+
+def test_two_t_boundary_scores(rng):
+    """Band boundaries are strict > keeps: score == t_major drops, score ==
+    t_minor stays MAJOR-only (consistent with ``threshold_to_drop_rate``
+    counting score <= t as dropped)."""
+    tm, tn = 0.05, 0.1
+    s = jnp.array([[tm, tn, tm - 1e-6, tn + 1e-6]])
+    modes = np.asarray(drop.two_t_modes(s, tm, tn))[0]
+    np.testing.assert_array_equal(
+        modes, [drop.MODE_DROP, drop.MODE_MAJOR, drop.MODE_DROP,
+                drop.MODE_FULL])
+
+
+def test_two_t_degeneracy_property(rng):
+    """Property: for random thresholds t, 2T(t, t) keep masks (both halves)
+    equal the 1T expansion bit for bit — on scores salted with exact
+    threshold values."""
+    for seed in range(5):
+        k1, k2 = jax.random.split(jax.random.fold_in(rng, seed))
+        t = float(jax.random.uniform(k1, ()))
+        s = jax.random.uniform(k2, (32, 4))
+        s = s.at[0, :2].set(t)               # exact boundary scores
+        idx = jnp.tile(jnp.arange(4)[None], (32, 1))
+        combine = jnp.full((32, 4), 0.25)
+        p2 = drop.expand_pairs_2t(idx, combine, s, 2, t, t)
+        p1 = drop.expand_pairs_1t(idx, combine, s, 2, t)
+        np.testing.assert_array_equal(np.asarray(p2.keep),
+                                      np.asarray(p1.keep))
+        np.testing.assert_array_equal(np.asarray(p2.modes),
+                                      np.asarray(p1.modes))
 
 
 def test_two_t_mode_bands(rng):

@@ -4,8 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.launch.hlo_analysis import (analyze_hlo, shape_elems_bytes,
-                                       roofline_terms)
+from repro.launch.hlo_analysis import (analyze_hlo, count_shape_instructions,
+                                       shape_elems_bytes, roofline_terms)
 
 
 def test_shape_parse():
@@ -37,6 +37,26 @@ def test_plain_matmul_flops():
     comp = jax.jit(f).lower(a, b).compile()
     c = analyze_hlo(comp.as_text())
     assert abs(c.flops - 2 * 64 * 32 * 16) / (2 * 64 * 32 * 16) < 0.01
+
+
+def test_count_shape_instructions():
+    """The fused-pipeline CI gate's primitive: count instructions producing
+    an array of exact dims (optionally dtype), skipping parameters."""
+    def f(a):
+        b = jnp.broadcast_to(a[None], (4, 8, 16))     # (4, 8, 16) produced
+        return b * 2.0                                # root keeps the shape
+
+    a = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+    hlo = jax.jit(f).lower(a).compile().as_text()
+    n = count_shape_instructions(hlo, (4, 8, 16))
+    assert n >= 1
+    # dtype filter: nothing produces an s32 of that shape
+    assert count_shape_instructions(hlo, (4, 8, 16), dtype="s32") == 0
+    # absent shape counts zero; parameters are excluded
+    assert count_shape_instructions(hlo, (3, 5, 7)) == 0
+    assert count_shape_instructions(hlo, (8, 16),
+                                    exclude_ops=()) >= \
+        count_shape_instructions(hlo, (8, 16))
 
 
 def test_roofline_terms():

@@ -1,0 +1,267 @@
+"""Fused Pallas MoE pipeline (dispatch -> expert FFN -> combine in ONE
+kernel) vs the retained buffer-path oracle, plus the overflow-unit and
+dispatch-heuristic regressions that ride with it (ROADMAP item 4)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dispatch as D
+from repro.core import drop, gating, moe
+from repro.core.policy import NoDrop, TwoTDrop
+from repro.kernels import ops as kops
+
+
+def _two_t_setup(rng, moe_cfg, moe_params, calib_x, fused: bool = True):
+    """Prepared 2T params + thresholds that actually produce mode-1 pairs
+    (router sharpened so normalized scores spread)."""
+    from benchmarks.common import sharp_router_params
+    params = sharp_router_params(moe_params)
+    pol = TwoTDrop(partition_p=2, use_kernel=True, fused_pipeline=fused)
+    prepared, _ = pol.prepare(params, moe_cfg, calib_x)
+    r = gating.route(calib_x, params["wg"], moe_cfg.top_k,
+                     moe_cfg.router_norm_topk)
+    t1 = float(jnp.quantile(r.norm_score, 0.35))
+    pol = dataclasses.replace(pol, t_major=t1 - 0.02, t_minor=t1 + 0.02)
+    pairs = pol.route(prepared, calib_x, moe_cfg)
+    modes = np.asarray(pairs.modes)
+    assert (modes == drop.MODE_MAJOR).sum() > 0, \
+        "setup must yield MAJOR-only pairs"
+    return prepared, pol, pairs
+
+
+# ---------------------------------------------------------------------------
+# Bit-consistency vs the buffer-path oracle
+# ---------------------------------------------------------------------------
+
+def test_fused_matches_oracle_p2_mode_grouped(rng, moe_cfg, moe_params,
+                                              calib_x):
+    """P=2 mode-grouped layout: the fused pipeline must match both the
+    buffer-path kernel and the dense reference on a routing that exercises
+    FULL, MAJOR-only, and dropped pairs."""
+    prepared, pol, pairs = _two_t_setup(rng, moe_cfg, moe_params, calib_x)
+    T = calib_x.shape[0]
+    y_buf, ov_buf = moe.moe_forward_dispatch(
+        prepared, calib_x, moe_cfg, pairs=pairs, capacity=T,
+        use_kernel=True, mode_grouped=True, return_overflow=True)
+    y_fus, ov_fus = moe.moe_forward_dispatch(
+        prepared, calib_x, moe_cfg, pairs=pairs, capacity=T,
+        fused_pipeline=True, mode_grouped=True, return_overflow=True)
+    y_ref = moe.moe_forward_ref(prepared, calib_x, moe_cfg, pairs=pairs)
+    np.testing.assert_allclose(np.asarray(y_fus), np.asarray(y_buf),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y_fus), np.asarray(y_ref),
+                               atol=1e-4)
+    assert int(ov_buf) == int(ov_fus) == 0
+
+
+def test_fused_matches_oracle_p1_sub_pairs(rng, moe_cfg, moe_params):
+    """P=1 sub-pair layout (no partition): fused pipeline vs the plain
+    einsum dispatch path."""
+    x = jax.random.normal(jax.random.fold_in(rng, 3),
+                          (48, moe_cfg.d_model))
+    pairs = NoDrop().route(moe_params, x, moe_cfg)
+    cap = moe.capacity_for(48, moe_cfg.top_k, moe_cfg.n_experts, 2.0)
+    y_buf = moe.moe_forward_dispatch(moe_params, x, moe_cfg, pairs=pairs,
+                                     capacity=cap)
+    y_fus = moe.moe_forward_dispatch(moe_params, x, moe_cfg, pairs=pairs,
+                                     capacity=cap, fused_pipeline=True)
+    np.testing.assert_allclose(np.asarray(y_fus), np.asarray(y_buf),
+                               atol=1e-4)
+
+
+def test_fused_capacity_overflow_consistency(rng, moe_cfg, moe_params,
+                                             calib_x):
+    """Under real capacity pressure the fused pipeline must drop exactly
+    the pairs the buffer path drops — same outputs, same overflow count."""
+    prepared, pol, pairs = _two_t_setup(rng, moe_cfg, moe_params, calib_x)
+    cap = 8   # << T*K/E: guaranteed overflow for the hot experts
+    y_buf, ov_buf = moe.moe_forward_dispatch(
+        prepared, calib_x, moe_cfg, pairs=pairs, capacity=cap,
+        use_kernel=True, mode_grouped=True, return_overflow=True)
+    y_fus, ov_fus = moe.moe_forward_dispatch(
+        prepared, calib_x, moe_cfg, pairs=pairs, capacity=cap,
+        fused_pipeline=True, mode_grouped=True, return_overflow=True)
+    assert int(ov_buf) > 0
+    assert int(ov_buf) == int(ov_fus)
+    np.testing.assert_allclose(np.asarray(y_fus), np.asarray(y_buf),
+                               atol=1e-4)
+
+
+def test_fused_ragged_f_blocks(rng):
+    """f % block_f != 0: the kernel's neuron-axis padding must stay exact
+    (padded w1/w3 columns are zero => zero contribution)."""
+    E, d, f, T, K = 3, 32, 96, 40, 2
+    ks = jax.random.split(rng, 6)
+    w1 = jax.random.normal(ks[0], (E, d, f)) * 0.1
+    w3 = jax.random.normal(ks[1], (E, d, f)) * 0.1
+    w2 = jax.random.normal(ks[2], (E, f, d)) * 0.1
+    x = jax.random.normal(ks[3], (T, d))
+    group = jax.random.randint(ks[4], (T, K), 0, E)
+    wts = jax.random.uniform(ks[5], (T, K))
+    cap = 48
+    plan = D.sort_dispatch(group, n_groups=E, capacity=cap)
+    # oracle: gather -> dense expert FFN -> unpermute + combine
+    buf = D.gather_rows(x, plan, cap, index_div=K)
+    gathered = D.unpermute(moe.expert_ffn(w1, w3, w2, buf), plan)
+    y_ref = (gathered * wts.reshape(-1)[:, None]).reshape(T, K, d).sum(1)
+    cf, cm = plan.kernel_counts(cap)
+    bc = 16
+    tok_s, w_s = D.sorted_pair_arrays(plan, wts, index_div=K, pad=bc)
+    y = kops.fused_moe_pipeline(x, w1, w3, w2, plan.group_offsets, cf, cm,
+                                tok_s, w_s, capacity=cap,
+                                n_minor_start=f, block_c=bc, block_f=64)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4)
+
+
+def test_fused_empty_experts(rng):
+    """Experts that receive zero rows must contribute nothing (their grid
+    steps are skipped entirely, incl. the gather/scatter loops)."""
+    E, d, f, T = 8, 16, 32, 6
+    ks = jax.random.split(rng, 4)
+    w1 = jax.random.normal(ks[0], (E, d, f)) * 0.1
+    w3 = jax.random.normal(ks[1], (E, d, f)) * 0.1
+    w2 = jax.random.normal(ks[2], (E, f, d)) * 0.1
+    x = jax.random.normal(ks[3], (T, d))
+    group = jnp.zeros((T, 1), jnp.int32)          # everything to expert 0
+    wts = jnp.ones((T, 1))
+    cap = 8
+    plan = D.sort_dispatch(group, n_groups=E, capacity=cap)
+    buf = D.gather_rows(x, plan, cap)
+    gathered = D.unpermute(moe.expert_ffn(w1, w3, w2, buf), plan)
+    y_ref = gathered.reshape(T, 1, d).sum(1)
+    cf, cm = plan.kernel_counts(cap)
+    tok_s, w_s = D.sorted_pair_arrays(plan, wts, pad=8)
+    y = kops.fused_moe_pipeline(x, w1, w3, w2, plan.group_offsets, cf, cm,
+                                tok_s, w_s, capacity=cap, n_minor_start=f,
+                                block_c=8)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Bugfix regression: overflow reported in canonical SUB-pair units
+# ---------------------------------------------------------------------------
+
+def test_overflow_sub_pair_units_all_paths(rng, moe_cfg, moe_params,
+                                           calib_x):
+    """The fused (ORIGINAL-expert) kernel paths used to count overflow in
+    fused-pair units — under-reporting by up to P-1 sub-pairs per drop vs
+    the sub-pair dispatch path. All three paths must now report the SAME
+    sub-pair count for the same routing under capacity pressure."""
+    from benchmarks.common import sharp_router_params
+    params = sharp_router_params(moe_params)
+    pol = TwoTDrop(partition_p=2, use_kernel=True)
+    prepared, _ = pol.prepare(params, moe_cfg, calib_x)
+    # all-FULL routing: every original pair keeps BOTH halves, so any
+    # overflow drop on the fused layout hides exactly 2 sub-pairs
+    pol = dataclasses.replace(pol, t_major=-1.0, t_minor=-1.0)
+    pairs = pol.route(prepared, calib_x, moe_cfg)
+    assert bool(pairs.keep.all())
+    cap = 8
+    _, ov_sub = moe.moe_forward_dispatch(
+        prepared, calib_x, moe_cfg, pairs=pairs, capacity=cap,
+        return_overflow=True)
+    _, ov_krn = moe.moe_forward_dispatch(
+        prepared, calib_x, moe_cfg, pairs=pairs, capacity=cap,
+        use_kernel=True, mode_grouped=True, return_overflow=True)
+    _, ov_fus = moe.moe_forward_dispatch(
+        prepared, calib_x, moe_cfg, pairs=pairs, capacity=cap,
+        fused_pipeline=True, mode_grouped=True, return_overflow=True)
+    assert int(ov_sub) > 0
+    assert int(ov_sub) == int(ov_krn) == int(ov_fus)
+    # P=2 all-FULL: fused-pair drops are exactly half the sub-pair count,
+    # so the OLD (fused-unit) accounting would have reported ov_sub // 2
+    assert int(ov_sub) % 2 == 0
+
+
+def test_overflow_sub_pair_units_mixed_modes(rng, moe_cfg, moe_params,
+                                             calib_x):
+    """Mixed FULL/MAJOR-only routing: the kernel path's sub-pair overflow
+    equals the exact recount from (plan slots x kept halves)."""
+    prepared, pol, pairs = _two_t_setup(rng, moe_cfg, moe_params, calib_x)
+    cap = 8
+    fused = D.fuse_sub_pairs(pairs, 2)
+    E = prepared["w1"].shape[0] // 2
+    plan = D.sort_dispatch(fused.group, fused.keep, n_groups=E,
+                           capacity=cap, major_only=fused.major_only)
+    kept_halves = np.asarray(pairs.keep).reshape(
+        pairs.keep.shape[0], -1, 2).sum(-1).reshape(-1)
+    overflowed = np.asarray(fused.keep).reshape(-1) & \
+        (np.asarray(plan.slot).reshape(-1) >= cap)
+    expected = int(kept_halves[overflowed].sum())
+    _, ov_krn = moe.moe_forward_dispatch(
+        prepared, calib_x, moe_cfg, pairs=pairs, capacity=cap,
+        use_kernel=True, mode_grouped=True, return_overflow=True)
+    assert expected > 0
+    assert int(ov_krn) == expected
+
+
+# ---------------------------------------------------------------------------
+# Execution hint: no retrace on threshold change
+# ---------------------------------------------------------------------------
+
+def test_fused_pipeline_no_retrace_on_threshold_change(rng, moe_cfg,
+                                                       moe_params, calib_x):
+    """Thresholds are traced pytree leaves; flipping them under the
+    fused_pipeline hint must reuse the jitted computation (the hint itself
+    is static aux data and may retrace when IT changes)."""
+    prepared, pol, _ = _two_t_setup(rng, moe_cfg, moe_params, calib_x)
+    traces = []
+
+    @jax.jit
+    def fwd(params, x, policy):
+        traces.append(1)
+        pairs = policy.route(params, x, moe_cfg)
+        return moe.moe_forward_dispatch(
+            params, x, moe_cfg, pairs=pairs, capacity=x.shape[0],
+            mode_grouped=policy.kernel_mode_grouping,
+            fused_pipeline=policy.fused_pipeline)
+
+    x = calib_x[:32]
+    fwd(prepared, x, pol)
+    assert len(traces) == 1
+    moved = dataclasses.replace(pol, t_major=pol.t_major + 0.01,
+                                t_minor=pol.t_minor + 0.01)
+    fwd(prepared, x, moved)
+    assert len(traces) == 1, "threshold change must not retrace"
+    off = dataclasses.replace(pol, fused_pipeline=False)
+    fwd(prepared, x, off)
+    assert len(traces) == 2, "flipping the static hint retraces once"
+
+
+# ---------------------------------------------------------------------------
+# Per-shape dispatch heuristic
+# ---------------------------------------------------------------------------
+
+def test_prefer_cumsum_heuristic_table():
+    """CPU + few groups + many pairs -> cumsum; everything else -> sort
+    (BENCH_dispatch.json: E=8, T>=1024 runs 0.68-0.86x on CPU)."""
+    assert D.prefer_cumsum_dispatch(8192, 8, backend="cpu")
+    assert D.prefer_cumsum_dispatch(32768, 4, backend="cpu")
+    assert not D.prefer_cumsum_dispatch(4096, 8, backend="cpu")
+    assert not D.prefer_cumsum_dispatch(8192, 64, backend="cpu")
+    assert not D.prefer_cumsum_dispatch(8192, 8, backend="tpu")
+    assert not D.prefer_cumsum_dispatch(8192, 8, backend="gpu")
+
+
+def test_dispatch_plan_heuristic_is_bit_identical(rng):
+    """dispatch_plan must produce the SAME plan whichever implementation
+    the heuristic picks — on a shape where it picks cumsum."""
+    T, K, E = 1024, 8, 8
+    ks = jax.random.split(rng, 3)
+    group = jax.random.randint(ks[0], (T, K), 0, E)
+    keep = jax.random.bernoulli(ks[1], 0.8, (T, K))
+    major = jax.random.bernoulli(ks[2], 0.3, (T, K)) & keep
+    cap = 1536
+    assert D.prefer_cumsum_dispatch(T * K, E, backend="cpu")
+    a = D.dispatch_plan(group, keep, n_groups=E, capacity=cap,
+                        major_only=major, backend="cpu")
+    b = D.sort_dispatch(group, keep, n_groups=E, capacity=cap,
+                        major_only=major)
+    for name in ("perm", "group_offsets", "counts_full", "counts_major",
+                 "group", "slot", "overflow"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, name)),
+                                      np.asarray(getattr(b, name)),
+                                      err_msg=name)

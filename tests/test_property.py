@@ -131,9 +131,10 @@ def test_two_t_modes_partition_exactly(seed, t_major, gap):
     # mutually exclusive: exactly one mode per pair
     assert np.all(in_drop.astype(int) + in_major.astype(int)
                   + in_full.astype(int) == 1)
-    # each region matches its defining predicate
-    np.testing.assert_array_equal(in_full, s >= t_minor)
-    np.testing.assert_array_equal(in_major, (s > t_major) & (s < t_minor))
+    # each region matches its defining predicate (strict > keeps on both
+    # boundaries, matching one_t_keep — see core.drop module docstring)
+    np.testing.assert_array_equal(in_full, s > t_minor)
+    np.testing.assert_array_equal(in_major, (s > t_major) & (s <= t_minor))
     np.testing.assert_array_equal(in_drop, s <= t_major)
     # the expanded sub-expert keep mask realizes the modes: majors kept for
     # mode>=1, minors kept only for mode 2
