@@ -19,7 +19,6 @@ import os
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dispatch as D
@@ -94,6 +93,11 @@ def run(smoke: bool = False, out_path: str | None = None) -> list[Row]:
     out_path = out_path or os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
         "BENCH_dispatch.json")
+    from repro.lint.bench_schema import validate_dispatch_bench
+    schema_errs = validate_dispatch_bench(payload)
+    assert not schema_errs, (
+        "refusing to write a malformed BENCH_dispatch.json: "
+        + "; ".join(schema_errs))
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")

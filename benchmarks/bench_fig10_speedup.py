@@ -10,7 +10,6 @@ target); the baseline is the keep-everything 2T policy."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core import drop, moe

@@ -8,7 +8,6 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core import drop, gating
-from repro.data import pipeline
 from repro.models import model as M
 
 from .common import Row

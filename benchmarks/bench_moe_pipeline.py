@@ -27,13 +27,13 @@ import os
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.core import moe as moe_mod
 from repro.core import policy as policy_mod
 from repro.launch import hlo_analysis
+from repro.lint.bench_schema import validate_pipeline_bench
+from repro.lint.hlo_passes import capacity_buffer_count
 from repro.models.layers import split_params
 
 from .common import Row, rel_err, sharp_router_params, time_fn
@@ -71,17 +71,6 @@ def _paths(cfg, params, policy, T: int):
     return buffer_fn, fused_fn, x, capacity
 
 
-def _capacity_buffer_count(hlo: str, E: int, capacity: int, d: int,
-                           block_c: int = 128) -> int:
-    """Instructions producing an (E, capacity, d) array — including the
-    kernel-padded capacity (``grouped_swiglu`` rounds C up to block_c)."""
-    caps = {capacity}
-    bc = min(block_c, capacity)
-    caps.add(capacity + (-capacity) % bc)
-    return sum(hlo_analysis.count_shape_instructions(hlo, (E, c, d))
-               for c in sorted(caps))
-
-
 def run(smoke: bool = False, out_path: str | None = None) -> list[Row]:
     cfg, params, policy = _setup()
     E = params["w1"].shape[0] // policy.partition_p
@@ -101,8 +90,8 @@ def run(smoke: bool = False, out_path: str | None = None) -> list[Row]:
 
         hlo_b = buffer_fn.lower(x).compile().as_text()
         hlo_f = fused_fn.lower(x).compile().as_text()
-        nb = _capacity_buffer_count(hlo_b, E, capacity, d)
-        nf = _capacity_buffer_count(hlo_f, E, capacity, d)
+        nb = capacity_buffer_count(hlo_b, E, capacity, d)
+        nf = capacity_buffer_count(hlo_f, E, capacity, d)
         assert nb > 0, (
             f"buffer path shows no (E={E}, C={capacity}, d={d}) "
             "intermediate — the assertion target moved; update the bench")
@@ -158,6 +147,10 @@ def run(smoke: bool = False, out_path: str | None = None) -> list[Row]:
         except (json.JSONDecodeError, OSError):
             pass
     payload["runs"].append(run_entry)
+    schema_errs = validate_pipeline_bench(payload)
+    assert not schema_errs, (
+        "refusing to write a malformed BENCH_moe_pipeline.json: "
+        + "; ".join(schema_errs))
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")

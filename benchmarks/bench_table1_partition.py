@@ -11,7 +11,6 @@ from __future__ import annotations
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core import moe, partition

@@ -7,7 +7,6 @@ ordering to reproduce: err(2T reconstruct) < err(2T partition) ≈ err(1T)."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core import drop, moe

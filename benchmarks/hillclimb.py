@@ -16,13 +16,11 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import INPUT_SHAPES, get_config
-from repro.launch import mesh as mesh_mod, specs
+from repro.launch import mesh as mesh_mod
 from repro.launch.hlo_analysis import analyze_hlo, roofline_terms
 from repro.launch import dryrun as dr
-from repro.models import model as M
 
 
 def main():

@@ -16,7 +16,6 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
-import jax.numpy as jnp
 
 from repro import checkpoint as ckpt
 from repro.configs.base import ModelConfig, DualSparseConfig

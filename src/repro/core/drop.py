@@ -19,7 +19,7 @@ All decisions are pure functions of the routing — fixed shapes, jit-safe.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -108,19 +108,26 @@ def flops_saved_fraction(modes) -> jax.Array:
 
 def threshold_to_drop_rate(norm_scores, thresholds):
     """Empirical threshold->drop-rate map (paper Fig. 12) from calibration
-    normalized scores (N,K). thresholds: (M,). Returns (M,) drop rates."""
-    flat = norm_scores.reshape(-1)
-    return jax.vmap(lambda t: jnp.mean(flat <= t))(jnp.asarray(thresholds))
+    normalized scores (N,K). thresholds: (M,). Returns (M,) f32 drop rates.
+
+    All math pinned to f32: under ``jax_enable_x64`` the bool-mean and the
+    Python-float threshold list would otherwise silently promote to f64
+    (caught by ``repro.lint``'s dtype-promotion pass)."""
+    flat = norm_scores.reshape(-1).astype(jnp.float32)
+    thresholds = jnp.asarray(thresholds, jnp.float32)
+    return jax.vmap(lambda t: jnp.mean(flat <= t, dtype=jnp.float32))(
+        thresholds)
 
 
 def calibrate_threshold(norm_scores, target_drop_rate: float):
     """Inverse of the threshold->drop-rate map: the T¹ achieving a target
     drop rate on calibration scores (the 'tailored mapping between threshold
-    and drop rate' the paper calls for in §5.3.3)."""
-    flat = jnp.sort(norm_scores.reshape(-1))
+    and drop rate' the paper calls for in §5.3.3). Returns an f32 scalar
+    (explicitly — no x64-dependent promotion)."""
+    flat = jnp.sort(norm_scores.reshape(-1).astype(jnp.float32))
     n = flat.shape[0]
-    idx = jnp.clip(jnp.floor(target_drop_rate * n).astype(jnp.int32),
-                   0, n - 1)
+    frac = jnp.asarray(target_drop_rate, jnp.float32)
+    idx = jnp.clip(jnp.floor(frac * n).astype(jnp.int32), 0, n - 1)
     return flat[idx]
 
 
@@ -134,6 +141,8 @@ def calibrate_per_layer_thresholds(layer_norm_scores, target_drop_rate: float,
 
     layer_norm_scores: list of (N,K) calibration scores, one per layer.
     Returns (L, 2) array of [t_major, t_minor] rows."""
+    gap = jnp.float32(gap)
     ts = jnp.stack([calibrate_threshold(s, target_drop_rate)
                     for s in layer_norm_scores])
-    return jnp.stack([jnp.maximum(ts - gap, 0.0), ts + gap], axis=1)
+    return jnp.stack([jnp.maximum(ts - gap, jnp.float32(0.0)), ts + gap],
+                     axis=1)

@@ -11,22 +11,25 @@ single psum of the (E,) routing histogram as the only communication.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 
 def device_loads(hist, experts_per_device: int):
-    """hist: (E,) global token counts per expert -> (D,) per-device loads,
-    with experts laid out contiguously across EP devices."""
+    """hist: (E,) global token counts per expert -> (D,) per-device loads
+    in f32 (downstream threshold math is float; summing in f32 explicitly
+    avoids both int-overflow on big histograms and x64-dependent int64
+    promotion of the reduction)."""
     E = hist.shape[0]
     D = E // experts_per_device
-    return hist.reshape(D, experts_per_device).sum(axis=1)
+    return hist.reshape(D, experts_per_device).astype(jnp.float32).sum(axis=1)
 
 
 def step_down_thresholds(loads, t_max: float):
-    """Paper §4.3 rule. loads: (D,) -> per-device thresholds (D,)."""
-    ideal = jnp.mean(loads.astype(jnp.float32))
-    ratio = loads.astype(jnp.float32) / jnp.maximum(ideal, 1e-9)
+    """Paper §4.3 rule. loads: (D,) -> per-device f32 thresholds (D,)."""
+    t_max = jnp.asarray(t_max, jnp.float32)
+    loads = loads.astype(jnp.float32)
+    ideal = jnp.mean(loads)
+    ratio = loads / jnp.maximum(ideal, 1e-9)
     return jnp.where(ratio >= 1.0, t_max, t_max * ratio)
 
 

@@ -15,13 +15,12 @@ Three forward paths, all fixed-shape / jit-safe:
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from ..models.layers import Param, normal
+from ..models.layers import normal
 from . import dispatch as dispatch_mod
 from . import gating
 from .drop import SubExpertPairs, expand_pairs_2t, MODE_FULL

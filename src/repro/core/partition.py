@@ -9,9 +9,8 @@ Params layout (see core.moe.make_moe_params):
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
-import jax
 import jax.numpy as jnp
 
 

@@ -55,6 +55,10 @@ def register_policy(name: str):
         dyn = tuple(cls._dynamic)
         static = tuple(f.name for f in dataclasses.fields(cls)
                        if f.name not in dyn)
+        # introspection hooks for repro.lint's retrace-hazard pass: the
+        # exact field partition the pytree flatten uses
+        cls._pytree_dynamic = dyn
+        cls._pytree_static = static
 
         def flatten(p):
             return (tuple(getattr(p, n) for n in dyn),
@@ -450,3 +454,9 @@ def make_policy(name: str, ds=None, *, drop_target: Optional[float] = None,
 
 def default_policy() -> SparsityPolicy:
     return NoDrop()
+
+
+def registered_policies() -> Dict[str, Type[SparsityPolicy]]:
+    """Snapshot of the policy registry (name -> class). ``repro.lint``
+    iterates this to audit every policy's static/traced field split."""
+    return dict(POLICIES)

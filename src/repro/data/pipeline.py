@@ -9,7 +9,7 @@ calibration stream is drawn from the same synthetic distribution).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,7 @@ single KV head on a 16-way model axis -> replicated).
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 import jax
 import numpy as np

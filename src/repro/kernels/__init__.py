@@ -1,3 +1,25 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Public kernel entry points.
+
+The jit'd wrappers (``fused_moe_pipeline``, ``grouped_swiglu``) are the
+production surface; the ``*_pallas`` launches accept ``interpret=`` for
+tests; the ``*_kernel_spec`` builders return the static ``KernelSpec``
+each launch derives its geometry from — the object ``repro.lint``'s
+Pallas passes analyze. Downstream code (and the lint registry) imports
+from this package, not the submodules.
+"""
+from .specs import BlockUse, KernelSpec
+from .dualsparse_ffn import (fused_moe_pipeline_kernel_spec,
+                             fused_moe_pipeline_pallas,
+                             grouped_swiglu_kernel_spec,
+                             grouped_swiglu_pallas)
+from .ops import fused_moe_pipeline, grouped_swiglu, grouped_swiglu_ref
+
+__all__ = [
+    "BlockUse", "KernelSpec",
+    "fused_moe_pipeline", "grouped_swiglu", "grouped_swiglu_ref",
+    "fused_moe_pipeline_kernel_spec", "grouped_swiglu_kernel_spec",
+    "fused_moe_pipeline_pallas", "grouped_swiglu_pallas",
+]

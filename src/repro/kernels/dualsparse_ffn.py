@@ -31,9 +31,98 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .specs import BlockUse, KernelSpec, dtype_name
+
+
+def _resolve_blocks(C: int, f: int, p_factor: int,
+                    n_minor_start: int | None, block_c: int, block_f: int):
+    """Shared geometry: clamp blocks to the logical dims, pad to block
+    multiples, resolve the minor-half boundary. Returns a meta dict both
+    kernel specs embed and both launches consume."""
+    block_c = min(block_c, C)
+    block_f = min(block_f, f)
+    pad_c, pad_f = (-C) % block_c, (-f) % block_f
+    Cp, fp = C + pad_c, f + pad_f
+    nf_sub = fp // block_f              # f-blocks per sub-expert
+    n_f = p_factor * nf_sub             # f-blocks over the virtual width
+    if n_minor_start is None:
+        if p_factor > 1:
+            n_minor_start = fp          # everything past sub-expert 0
+        else:
+            n_minor_start = f // 2 if f % 2 == 0 else f
+    return dict(block_c=block_c, block_f=block_f, pad_c=pad_c, pad_f=pad_f,
+                Cp=Cp, fp=fp, nf_sub=nf_sub, n_f=n_f,
+                n_minor_start=n_minor_start, p_factor=p_factor)
+
+
+def grouped_swiglu_kernel_spec(E: int, C: int, d: int, f: int, *,
+                               dtype=jnp.float32, p_factor: int = 1,
+                               n_minor_start: int | None = None,
+                               block_c: int = 128,
+                               block_f: int = 128) -> KernelSpec:
+    """Static launch description of ``grouped_swiglu_pallas`` for logical
+    shapes x: (E, C, d), w1/w3: (E*p_factor, d, f), w2: (E*p_factor, f, d).
+    The launch derives its grid/blocks from this spec, so the
+    ``repro.lint`` Pallas passes analyze exactly what runs."""
+    g = _resolve_blocks(C, f, p_factor, n_minor_start, block_c, block_f)
+    dt = dtype_name(dtype)
+    blocks = (
+        BlockUse("counts_full", (E,), "int32", "in", streamed=False,
+                 control=True),
+        BlockUse("counts_major", (E,), "int32", "in", streamed=False,
+                 control=True),
+        BlockUse("x", (1, g["block_c"], d), dt, "in"),
+        BlockUse("w1", (1, d, g["block_f"]), dt, "in"),
+        BlockUse("w3", (1, d, g["block_f"]), dt, "in"),
+        BlockUse("w2", (1, g["block_f"], d), dt, "in"),
+        BlockUse("out", (1, g["block_c"], d), "float32", "out"),
+    )
+    grid = (E, g["Cp"] // g["block_c"], g["n_f"])
+    meta = dict(g, E=E, C=C, d=d, f=f, virtual_f=g["fp"] * p_factor)
+    return KernelSpec("grouped_swiglu", grid, blocks, meta)
+
+
+def fused_moe_pipeline_kernel_spec(T: int, d: int, f: int, E: int,
+                                   n_pairs_padded: int, *,
+                                   capacity: int, dtype=jnp.float32,
+                                   p_factor: int = 1,
+                                   n_minor_start: int | None = None,
+                                   block_c: int = 128,
+                                   block_f: int = 128) -> KernelSpec:
+    """Static launch description of ``fused_moe_pipeline_pallas``: the
+    (T, d) activation/output arrays and the per-pair maps are whole-array
+    RESIDENT blocks (streamed=False) — on a real TPU the maps belong in
+    SMEM via scalar prefetch and x/out in ANY memory with explicit DMA, so
+    the honest VMEM estimate here is the quantity the lint budget-checks."""
+    g = _resolve_blocks(capacity, f, p_factor, n_minor_start,
+                        block_c, block_f)
+    dt = dtype_name(dtype)
+    blocks = (
+        BlockUse("group_offsets", (E,), "int32", "in", streamed=False,
+                 control=True),
+        BlockUse("counts_full", (E,), "int32", "in", streamed=False,
+                 control=True),
+        BlockUse("counts_major", (E,), "int32", "in", streamed=False,
+                 control=True),
+        BlockUse("tok_sorted", (n_pairs_padded,), "int32", "in",
+                 streamed=False, control=True),
+        BlockUse("combine_sorted", (n_pairs_padded,), "float32", "in",
+                 streamed=False, control=True),
+        BlockUse("x", (T, d), dt, "in", streamed=False),
+        BlockUse("w1", (1, d, g["block_f"]), dt, "in"),
+        BlockUse("w3", (1, d, g["block_f"]), dt, "in"),
+        BlockUse("w2", (1, g["block_f"], d), dt, "in"),
+        BlockUse("out", (T, d), "float32", "out", streamed=False),
+        BlockUse("x_scratch", (g["block_c"], d), dt, "scratch"),
+        BlockUse("acc_scratch", (g["block_c"], d), "float32", "scratch"),
+    )
+    grid = (E, g["Cp"] // g["block_c"], g["n_f"])
+    meta = dict(g, E=E, C=capacity, d=d, f=f, T=T, capacity=capacity,
+                n_pairs_padded=n_pairs_padded, virtual_f=g["fp"] * p_factor)
+    return KernelSpec("fused_moe_pipeline", grid, blocks, meta)
 
 
 def _kernel(counts_full_ref, counts_major_ref,   # tiny (E,) control arrays
@@ -112,26 +201,23 @@ def grouped_swiglu_pallas(x, w1, w3, w2, counts_full=None, counts_major=None,
         counts_full = jnp.full((E,), C, jnp.int32)
     if counts_major is None:
         counts_major = jnp.zeros((E,), jnp.int32)
-    block_c = min(block_c, C)
-    block_f = min(block_f, f)
+    spec = grouped_swiglu_kernel_spec(
+        E, C, d, f, dtype=x.dtype, p_factor=p_factor,
+        n_minor_start=n_minor_start, block_c=block_c, block_f=block_f)
+    g = spec.meta
+    block_c, block_f = g["block_c"], g["block_f"]
+    pc, pf = g["pad_c"], g["pad_f"]
+    Cp, nf_sub = g["Cp"], g["nf_sub"]
+    n_minor_start = g["n_minor_start"]
+    grid = spec.grid
     # pad C / per-sub-expert f to block multiples (padded neuron columns are
     # zero in w1/w3 => silu(0)*0 == 0 contribution through zero w2 rows)
-    pc, pf = (-C) % block_c, (-f) % block_f
     if pc:
         x = jnp.pad(x, ((0, 0), (0, pc), (0, 0)))
     if pf:
         w1 = jnp.pad(w1, ((0, 0), (0, 0), (0, pf)))
         w3 = jnp.pad(w3, ((0, 0), (0, 0), (0, pf)))
         w2 = jnp.pad(w2, ((0, 0), (0, pf), (0, 0)))
-    Cp, fp = C + pc, f + pf
-    nf_sub = fp // block_f              # f-blocks per sub-expert
-    grid = (E, Cp // block_c, p_factor * nf_sub)
-
-    if n_minor_start is None:
-        if p_factor > 1:
-            n_minor_start = fp          # everything past sub-expert 0
-        else:
-            n_minor_start = f // 2 if f % 2 == 0 else f
 
     kernel = functools.partial(
         _kernel, block_c=block_c, block_f=block_f,
@@ -281,26 +367,21 @@ def fused_moe_pipeline_pallas(x, w1, w3, w2, group_offsets, counts_full,
         f"weights carry {Es} sub-experts; plan has {E} groups x "
         f"p_factor {p_factor}")
     assert capacity >= 1
-    block_c = min(block_c, capacity)
-    block_f = min(block_f, f)
-    pc, pf = (-capacity) % block_c, (-f) % block_f
+    assert tok_sorted.shape == combine_sorted.shape
+    Np = tok_sorted.shape[0]
+    spec = fused_moe_pipeline_kernel_spec(
+        T, d, f, E, Np, capacity=capacity, dtype=x.dtype,
+        p_factor=p_factor, n_minor_start=n_minor_start,
+        block_c=block_c, block_f=block_f)
+    g = spec.meta
+    block_c, block_f = g["block_c"], g["block_f"]
+    pf, nf_sub, n_f = g["pad_f"], g["nf_sub"], g["n_f"]
+    n_minor_start = g["n_minor_start"]
+    grid = spec.grid
     if pf:
         w1 = jnp.pad(w1, ((0, 0), (0, 0), (0, pf)))
         w3 = jnp.pad(w3, ((0, 0), (0, 0), (0, pf)))
         w2 = jnp.pad(w2, ((0, 0), (0, pf), (0, 0)))
-    Cp, fp = capacity + pc, f + pf
-    nf_sub = fp // block_f
-    n_f = p_factor * nf_sub
-    grid = (E, Cp // block_c, n_f)
-
-    if n_minor_start is None:
-        if p_factor > 1:
-            n_minor_start = fp          # everything past sub-expert 0
-        else:
-            n_minor_start = f // 2 if f % 2 == 0 else f
-
-    assert tok_sorted.shape == combine_sorted.shape
-    Np = tok_sorted.shape[0]
 
     kernel = functools.partial(
         _fused_pipeline_kernel, block_c=block_c, block_f=block_f,

@@ -9,10 +9,16 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
-from .dualsparse_ffn import fused_moe_pipeline_pallas, grouped_swiglu_pallas
+from .dualsparse_ffn import (fused_moe_pipeline_kernel_spec,
+                             fused_moe_pipeline_pallas,
+                             grouped_swiglu_kernel_spec,
+                             grouped_swiglu_pallas)
 from . import ref
+
+__all__ = ["fused_moe_pipeline", "grouped_swiglu", "grouped_swiglu_ref",
+           "fused_moe_pipeline_kernel_spec", "grouped_swiglu_kernel_spec",
+           "fused_moe_pipeline_pallas", "grouped_swiglu_pallas"]
 
 
 def _on_tpu() -> bool:

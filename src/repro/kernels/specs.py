@@ -1,0 +1,67 @@
+"""Introspectable Pallas launch metadata.
+
+Every Pallas kernel in this package derives its launch geometry (grid,
+block shapes, padding, scratch allocation) from a ``KernelSpec`` built by a
+pure function of the logical shapes — the SAME spec object the static
+analyzers in ``repro.lint.pallas_passes`` consume. Because the kernel
+launch and the lint read one source of truth, the VMEM-footprint /
+MXU-alignment / grid-coverage checks can never drift from what actually
+runs, and they run on CPU with no TPU and no tracing at all.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockUse:
+    """One operand/result/scratch block of a kernel grid step."""
+    name: str
+    shape: Tuple[int, ...]          # per-grid-step block shape
+    dtype: str                      # numpy dtype name, e.g. "float32"
+    kind: str                       # "in" | "out" | "scratch"
+    streamed: bool = True           # block revolves per grid step (the
+    #                                 pipeline double-buffers it); False =
+    #                                 whole-array resident for the launch
+    control: bool = False           # scalar control data (counts, offsets,
+    #                                 pair maps) — exempt from MXU tiling
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.shape, dtype=np.int64)) * \
+            np.dtype(self.dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """Static launch description of one ``pl.pallas_call``.
+
+    ``meta`` carries the resolved geometry (padded dims, minor-half
+    boundary, logical shapes) the analyzers cross-check; keys are
+    kernel-specific but always include the logical dims used to build the
+    spec.
+    """
+    name: str
+    grid: Tuple[int, ...]
+    blocks: Tuple[BlockUse, ...]
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def vmem_bytes(self) -> int:
+        """Static VMEM working-set estimate for one grid step: streamed
+        blocks are double-buffered by the Pallas pipeline (x2), resident
+        blocks and scratch are allocated once."""
+        total = 0
+        for b in self.blocks:
+            mult = 2 if (b.streamed and b.kind != "scratch") else 1
+            total += mult * b.nbytes
+        return total
+
+    def blocks_of_kind(self, kind: str) -> Tuple[BlockUse, ...]:
+        return tuple(b for b in self.blocks if b.kind == kind)
+
+
+def dtype_name(dtype) -> str:
+    return np.dtype(dtype).name

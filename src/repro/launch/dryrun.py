@@ -5,7 +5,6 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
-import dataclasses
 import json
 import subprocess
 import sys
@@ -20,7 +19,7 @@ from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
 from repro.configs.base import InputShape, ModelConfig
 from repro.launch import mesh as mesh_mod
 from repro.launch import specs
-from repro.launch.hlo_analysis import collect_collectives, roofline_terms
+from repro.launch.hlo_analysis import roofline_terms
 from repro.models import model as M
 from repro.models.transformer import DistContext
 from repro.optim import adamw

@@ -5,17 +5,14 @@ weak-type-correct ShapeDtypeStructs — nothing is ever allocated.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs.base import ModelConfig, InputShape
-from ..distributed.sharding import batch_spec, spec_for, tree_shardings
-from ..models import model as M
+from ..distributed.sharding import batch_spec, spec_for
 
 
 def sds(shape, dtype):

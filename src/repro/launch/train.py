@@ -15,9 +15,8 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs import ASSIGNED_ARCHS, get_config, list_archs
+from repro.configs import get_config, list_archs
 from repro.data import pipeline
 from repro.models import model as M
 from repro.optim import adamw, cosine_schedule

@@ -1,0 +1,25 @@
+"""``repro.lint`` — static-analysis pass suite with a CI gate.
+
+Three pass families over a registry of traced public entry points:
+
+  * **jaxpr** — dtype-promotion lint (silent f32 -> f64 upcasts, probed
+    under ``jax_enable_x64``), host-sync/callback detection, and a
+    retrace-hazard audit of every registered ``SparsityPolicy``'s pytree
+    static/traced field split;
+  * **HLO** — forbidden capacity-buffer shapes on the fused pipeline
+    (generalizing PR 6's bench assertion), per-entry collective-op budgets
+    for the shard_map S-ETP paths, HBM-bytes regression against a
+    checked-in baseline;
+  * **Pallas** — static VMEM-footprint, MXU tile-alignment, and
+    grid-coverage checks on the ``KernelSpec`` objects the kernel launches
+    derive their own geometry from — no TPU, no tracing.
+
+Run ``python -m repro.lint --ci``; suppress known findings in
+``lint_baseline.json``. See README "Static analysis".
+"""
+from .findings import Baseline, Finding, Severity
+from .registry import Artifacts, LintEntry, build_entries
+from .runner import LintReport, run_lint
+
+__all__ = ["Artifacts", "Baseline", "Finding", "LintEntry", "LintReport",
+           "Severity", "build_entries", "run_lint"]

@@ -1,0 +1,66 @@
+"""CLI: ``python -m repro.lint [--ci] [--entries GLOB] [--passes GLOB] ...``
+
+Forces 8 host devices BEFORE importing jax so the shard_map (S-ETP)
+entries lower with real collectives for the collective-budget pass; all
+other entries are device-count-agnostic.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="Static-analysis pass suite over the repo's public "
+                    "entry points (jaxpr / HLO / Pallas-spec families).")
+    ap.add_argument("--ci", action="store_true",
+                    help="full matrix; exit 1 on any non-suppressed ERROR")
+    ap.add_argument("--entries", action="append", metavar="GLOB",
+                    help="only entries matching GLOB (repeatable), e.g. "
+                         "'dispatch/*' or 'kernel/*'")
+    ap.add_argument("--passes", action="append", metavar="GLOB",
+                    help="only passes matching GLOB (repeatable), e.g. "
+                         "'pallas-*'")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline/suppression file "
+                         "(default: ./lint_baseline.json)")
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="rewrite the baseline's hbm_bytes from this run")
+    ap.add_argument("--list", action="store_true", dest="list_entries",
+                    help="print the entry matrix and exit")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable findings on stdout")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="show INFO findings too")
+    args = ap.parse_args(argv)
+
+    if "jax" not in sys.modules:
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + " --xla_force_host_platform_device_count=8").strip()
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    from .registry import build_entries
+    from .runner import run_lint
+
+    entries = build_entries()
+    if args.list_entries:
+        for e in entries:
+            print(e.name)
+        return 0
+
+    report = run_lint(entries=entries, entry_globs=args.entries,
+                      pass_globs=args.passes,
+                      baseline_path=args.baseline,
+                      update_baselines=args.update_baselines)
+    print(report.as_json() if args.json
+          else report.render(verbose=args.verbose))
+    return report.exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,87 @@
+"""Finding/severity/baseline model for the ``repro.lint`` pass suite.
+
+A finding is one violation of a structural invariant, attributed to the
+(pass, code, entry) triple whose string form — the *fingerprint* — is what
+the baseline file suppresses. Fingerprints deliberately exclude messages
+and numbers so a suppression survives cosmetic drift but a genuinely new
+(pass, entry) pairing always surfaces.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import fnmatch
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+
+class Severity(enum.IntEnum):
+    INFO = 0
+    WARNING = 1
+    ERROR = 2
+
+    def __str__(self) -> str:          # "ERROR", not "Severity.ERROR"
+        return self.name
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    pass_name: str                     # e.g. "pallas-vmem"
+    code: str                          # e.g. "vmem-budget"
+    severity: Severity
+    entry: str                         # registry entry name ("" for global)
+    message: str
+    detail: str = ""
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.pass_name}:{self.code}:{self.entry}"
+
+    def render(self) -> str:
+        loc = self.entry or "<global>"
+        s = f"{self.severity}: [{self.pass_name}:{self.code}] {loc}: " \
+            f"{self.message}"
+        if self.detail:
+            s += f"\n    {self.detail}"
+        return s
+
+
+@dataclasses.dataclass
+class Baseline:
+    """Checked-in known-findings file (``lint_baseline.json``).
+
+    ``suppressions``: list of ``{"fingerprint": <glob>, "reason": str}`` —
+    fnmatch globs over finding fingerprints. ``hbm_bytes``: per-entry HBM
+    estimate the hbm-bytes pass regresses against (written by
+    ``--update-baselines``)."""
+    suppressions: List[Dict[str, str]] = dataclasses.field(
+        default_factory=list)
+    hbm_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    path: Optional[Path] = None
+
+    @classmethod
+    def load(cls, path) -> "Baseline":
+        path = Path(path)
+        if not path.exists():
+            return cls(path=path)
+        raw = json.loads(path.read_text())
+        return cls(suppressions=list(raw.get("suppressions", [])),
+                   hbm_bytes=dict(raw.get("hbm_bytes", {})),
+                   path=path)
+
+    def save(self, path=None) -> None:
+        path = Path(path or self.path)
+        path.write_text(json.dumps(
+            {"suppressions": self.suppressions,
+             "hbm_bytes": {k: self.hbm_bytes[k]
+                           for k in sorted(self.hbm_bytes)}},
+            indent=2) + "\n")
+
+    def suppression_for(self, finding: Finding) -> Optional[str]:
+        """The reason string of the first matching suppression, else None."""
+        for s in self.suppressions:
+            if fnmatch.fnmatchcase(finding.fingerprint,
+                                   s.get("fingerprint", "")):
+                return s.get("reason", "(no reason given)")
+        return None

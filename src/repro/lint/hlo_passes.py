@@ -1,0 +1,142 @@
+"""HLO-level passes: forbidden-buffer shapes, collective budgets, HBM bytes.
+
+These generalize the one-off assertion PR 6 ran inside
+``benchmarks/bench_moe_pipeline.py`` (count (E, capacity, d) shapes in the
+fused path's HLO) into reusable checks over any registry entry that lowers
+to HLO text. Everything parses the compiled module with
+``launch.hlo_analysis`` — no execution.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..launch import hlo_analysis as ha
+from .findings import Finding, Severity
+
+# factor by which the HBM estimate may grow over its checked-in baseline
+# before the lint errors (parser jitter across jaxlib versions stays well
+# under this; a re-materialized capacity buffer does not)
+HBM_TOLERANCE = 1.5
+
+
+def capacity_buffer_count(hlo: str, n_groups: int, capacity: int, d: int,
+                          *, block_c: int = 128) -> int:
+    """Instructions materializing an (E, capacity, d) dispatch buffer —
+    exact or padded to the kernel's row-block multiple. The fused pipeline
+    must produce ZERO of these; the buffer path produces many. This is the
+    single source of truth for both the lint pass and
+    ``benchmarks/bench_moe_pipeline.py``'s CI gate."""
+    bc = min(block_c, capacity)
+    cap_padded = (capacity + bc - 1) // bc * bc
+    n = ha.count_shape_instructions(hlo, (n_groups, capacity, d))
+    if cap_padded != capacity:
+        n += ha.count_shape_instructions(hlo, (n_groups, cap_padded, d))
+    return n
+
+
+def check_forbidden_shapes(hlo: str, entry: str,
+                           shapes: Sequence[Tuple[int, ...]],
+                           dtype: Optional[str] = None) -> List[Finding]:
+    """ERROR for every instruction whose result materializes one of the
+    forbidden dims tuples (entry meta ``forbid_shapes``)."""
+    out: List[Finding] = []
+    for dims in shapes:
+        n = ha.count_shape_instructions(hlo, dims, dtype=dtype)
+        if n:
+            out.append(Finding(
+                "hlo-capacity-buffer", "forbidden-shape", Severity.ERROR,
+                entry, f"{n} instruction(s) materialize a "
+                f"{tuple(int(x) for x in dims)} buffer the fused path "
+                f"exists to eliminate",
+                "the dispatch gather / unpermute read-back leaked back "
+                "into this entry point — check fused_pipeline plumbing"))
+    return out
+
+
+def check_required_shapes(hlo: str, entry: str,
+                          shapes: Sequence[Tuple[int, ...]]) -> List[Finding]:
+    """Converse guard (entry meta ``require_shapes``): the buffer-path
+    oracle must still materialize its capacity buffer — zero means the
+    forbidden-shape gate's target moved and the fused check is vacuous."""
+    out: List[Finding] = []
+    for dims in shapes:
+        if ha.count_shape_instructions(hlo, dims) == 0:
+            out.append(Finding(
+                "hlo-capacity-buffer", "expected-shape-missing",
+                Severity.ERROR, entry,
+                f"no instruction materializes the expected "
+                f"{tuple(int(x) for x in dims)} buffer",
+                "the capacity-buffer gate is comparing against nothing — "
+                "update the entry geometry"))
+    return out
+
+
+def check_collective_budget(hlo: str, entry: str,
+                            budget: Dict[str, int]) -> List[Finding]:
+    """Per-entry collective-op budgets for shard_map paths (entry meta
+    ``collective_budget``: HLO kind -> max instruction count, e.g. the
+    S-ETP invariant of exactly one dispatch + one return all-to-all).
+    Kinds not listed are unconstrained."""
+    stats = ha.collect_collectives(hlo)
+    out: List[Finding] = []
+    for kind, limit in sorted(budget.items()):
+        got = int(stats.count_by_kind.get(kind, 0))
+        if got > limit:
+            out.append(Finding(
+                "hlo-collectives", f"budget-{kind}", Severity.ERROR, entry,
+                f"{got}x '{kind}' exceeds this entry's budget of {limit}",
+                "an extra collective per MoE layer multiplies across the "
+                "stack — fold it into the existing psum/AlltoAll or raise "
+                "the budget deliberately"))
+    return out
+
+
+def check_hbm_bytes(hlo: str, entry: str,
+                    baseline_bytes: Optional[float]) -> List[Finding]:
+    """Regress the parsed HBM-traffic estimate against the checked-in
+    baseline (``lint_baseline.json`` ``hbm_bytes``); WARNING when no
+    baseline exists yet (run ``--update-baselines``)."""
+    actual = ha.analyze_hlo(hlo).hbm_bytes
+    if baseline_bytes is None:
+        return [Finding(
+            "hlo-hbm", "no-baseline", Severity.WARNING, entry,
+            f"no HBM baseline recorded (current estimate: "
+            f"{actual / 1e6:.2f} MB)",
+            "run `python -m repro.lint --update-baselines` and commit "
+            "lint_baseline.json")]
+    if actual > baseline_bytes * HBM_TOLERANCE:
+        return [Finding(
+            "hlo-hbm", "regression", Severity.ERROR, entry,
+            f"HBM estimate {actual / 1e6:.2f} MB exceeds baseline "
+            f"{baseline_bytes / 1e6:.2f} MB by more than "
+            f"{HBM_TOLERANCE:.1f}x",
+            "a layout/materialization regression — or a deliberate change "
+            "that should refresh the baseline with --update-baselines")]
+    if actual * HBM_TOLERANCE < baseline_bytes:
+        return [Finding(
+            "hlo-hbm", "improved", Severity.INFO, entry,
+            f"HBM estimate {actual / 1e6:.2f} MB is well below baseline "
+            f"{baseline_bytes / 1e6:.2f} MB — consider refreshing the "
+            f"baseline to lock in the win")]
+    return []
+
+
+def check_hbm_ordering(hlo_by_entry: Dict[str, str], entry: str,
+                       less_than_entry: str) -> List[Finding]:
+    """Relative invariant (entry meta ``hbm_less_than``): this entry's HBM
+    estimate must stay below the named entry's — e.g. fused pipeline <
+    capacity-buffer oracle on identical shapes."""
+    this_hlo = hlo_by_entry.get(entry)
+    other_hlo = hlo_by_entry.get(less_than_entry)
+    if this_hlo is None or other_hlo is None:
+        return []
+    a = ha.analyze_hlo(this_hlo).hbm_bytes
+    b = ha.analyze_hlo(other_hlo).hbm_bytes
+    if a >= b:
+        return [Finding(
+            "hlo-hbm", "ordering", Severity.ERROR, entry,
+            f"HBM estimate {a / 1e6:.2f} MB is not below "
+            f"{less_than_entry!r}'s {b / 1e6:.2f} MB",
+            "the fused path lost its traffic advantage over the buffer "
+            "oracle")]
+    return []

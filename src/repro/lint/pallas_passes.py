@@ -1,0 +1,135 @@
+"""Pallas-spec passes: VMEM budget, MXU tile alignment, grid coverage.
+
+These run on the ``KernelSpec`` objects the kernel launches themselves
+derive their geometry from (``kernels.specs``) — pure arithmetic on static
+shapes, so they need neither a TPU nor a trace. Hardware constants follow
+the TPU generation targeted by the kernels: ~16 MB VMEM per core, 128x128
+MXU, (sublane x 128-lane) min tile with dtype-dependent sublane counts.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from ..kernels.specs import KernelSpec
+from .findings import Finding, Severity
+
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+LANE = 128
+
+# second-to-last-dim multiple for the packed min tile, by dtype itemsize
+_SUBLANE_BY_ITEMSIZE = {4: 8, 2: 16, 1: 32}
+
+
+def check_vmem_footprint(spec: KernelSpec, entry: str,
+                         budget: int = VMEM_BUDGET_BYTES) -> List[Finding]:
+    """Static VMEM working set (streamed blocks double-buffered, resident
+    blocks and scratch counted once) vs the per-core budget. Entry meta
+    ``vmem_budget`` overrides the default 16 MB."""
+    total = spec.vmem_bytes()
+    if total > budget:
+        worst = max(spec.blocks, key=lambda b: b.nbytes)
+        return [Finding(
+            "pallas-vmem", "vmem-budget", Severity.ERROR, entry,
+            f"{spec.name}: estimated VMEM working set "
+            f"{total / 2**20:.1f} MB exceeds the {budget / 2**20:.0f} MB "
+            f"budget",
+            f"largest block: {worst.name} {worst.shape} {worst.dtype} "
+            f"({worst.nbytes / 2**20:.1f} MB) — shrink block_c/block_f or "
+            f"move whole-array operands to ANY memory with explicit DMA")]
+    if total > 0.8 * budget:
+        return [Finding(
+            "pallas-vmem", "vmem-near-budget", Severity.WARNING, entry,
+            f"{spec.name}: estimated VMEM {total / 2**20:.1f} MB is within "
+            f"20% of the {budget / 2**20:.0f} MB budget")]
+    return []
+
+
+def _full_dim_values(spec: KernelSpec):
+    """Dim sizes that equal a whole logical/padded array dimension — a
+    block spanning the full axis cannot be aligned further, the hardware
+    pads it to the min tile (wasteful but correct -> INFO, not ERROR)."""
+    m = spec.meta
+    vals = {m.get(k) for k in ("d", "fp", "Cp", "T", "capacity", "f", "C",
+                               "n_pairs_padded", "E")}
+    vals.discard(None)
+    return vals
+
+
+def check_mxu_alignment(spec: KernelSpec, entry: str) -> List[Finding]:
+    """Last dim % 128 (lane) and second-to-last % sublane(dtype) on every
+    matrix block (control blocks and 1-d blocks are exempt). A misaligned
+    dim that spans its full logical axis downgrades to INFO — the MXU pads
+    it; a misaligned *tile choice* (e.g. block_f=100) is an ERROR because
+    every grid step then pays a partial-tile penalty by construction."""
+    out: List[Finding] = []
+    full = _full_dim_values(spec)
+    for b in spec.blocks:
+        if b.control or len(b.shape) < 2:
+            continue
+        last, sub = b.shape[-1], b.shape[-2]
+        sublane = _SUBLANE_BY_ITEMSIZE.get(np.dtype(b.dtype).itemsize, 8)
+        if last % LANE:
+            sev = Severity.INFO if last in full else Severity.ERROR
+            out.append(Finding(
+                "pallas-mxu", "lane-misaligned", sev, entry,
+                f"{spec.name}.{b.name}: last dim {last} % {LANE} != 0",
+                "full-axis block; hardware pads the lane dim" if sev ==
+                Severity.INFO else
+                "pick a block size that is a multiple of 128 lanes"))
+        if sub % sublane:
+            sev = Severity.INFO if sub in full else Severity.ERROR
+            out.append(Finding(
+                "pallas-mxu", "sublane-misaligned", sev, entry,
+                f"{spec.name}.{b.name}: dim {sub} % {sublane} != 0 "
+                f"({b.dtype} sublane)",
+                "full-axis block; hardware pads the sublane dim" if sev ==
+                Severity.INFO else
+                f"pick a block size that is a multiple of {sublane} for "
+                f"{b.dtype}"))
+    return out
+
+
+def check_grid_coverage(spec: KernelSpec, entry: str) -> List[Finding]:
+    """Cross-check the grid against the resolved geometry meta: every
+    logical row/neuron must be covered exactly once, ragged ``f % block_f``
+    edges must stay inside one trailing block, and the minor-half boundary
+    must land inside the virtual width."""
+    out: List[Finding] = []
+    m = spec.meta
+
+    def err(code, msg, detail=""):
+        out.append(Finding("pallas-grid", code, Severity.ERROR, entry,
+                           f"{spec.name}: {msg}", detail))
+
+    block_c, block_f = m.get("block_c"), m.get("block_f")
+    Cp, fp = m.get("Cp"), m.get("fp")
+    pad_c, pad_f = m.get("pad_c", 0), m.get("pad_f", 0)
+    p = m.get("p_factor", 1)
+    C, f = m.get("C"), m.get("f")
+    if None in (block_c, block_f, Cp, fp, C, f):
+        err("meta-incomplete", "spec meta lacks resolved geometry keys")
+        return out
+    if pad_c >= block_c or pad_f >= block_f:
+        err("overpadded", f"padding (pad_c={pad_c}, pad_f={pad_f}) reaches "
+            f"a full block — a whole grid step would compute only padding")
+    if Cp % block_c or Cp != C + pad_c or Cp < C:
+        err("row-coverage", f"Cp={Cp} does not tile C={C} by "
+            f"block_c={block_c}")
+    if fp % block_f or fp != f + pad_f or fp < f:
+        err("neuron-coverage", f"fp={fp} does not tile f={f} by "
+            f"block_f={block_f}")
+    want_grid = (m.get("E"), Cp // block_c, p * (fp // block_f))
+    if tuple(spec.grid) != tuple(want_grid):
+        err("grid-mismatch", f"grid {tuple(spec.grid)} != expected "
+            f"{want_grid} from (E, Cp/block_c, p_factor*fp/block_f)",
+            "a launch deriving its grid elsewhere than the spec would "
+            "silently skip or duplicate tiles")
+    nms = m.get("n_minor_start")
+    virtual = fp * p
+    if nms is None or not (0 <= nms <= virtual):
+        err("minor-boundary", f"n_minor_start={nms} outside the virtual "
+            f"neuron width [0, {virtual}]",
+            "MAJOR-only rows would skip the wrong tiles")
+    return out

@@ -1,0 +1,181 @@
+"""Pass orchestration: trace the registry, run the pass families, apply
+the baseline, report.
+
+Per-entry passes consume one entry's artifacts; global passes see the
+whole run (policy-registry audit, cross-entry HBM ordering, bench-file
+schemas). A trace failure is itself a finding (``runner:trace-error``) —
+the lint never dies on one broken entry point.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import json
+import traceback
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+from . import bench_schema, hlo_passes, jaxpr_passes, pallas_passes
+from .findings import Baseline, Finding, Severity
+from .registry import Artifacts, LintEntry, build_entries
+
+PASS_NAMES = ("jaxpr-dtype", "jaxpr-hostsync", "policy-retrace",
+              "hlo-capacity-buffer", "hlo-collectives", "hlo-hbm",
+              "pallas-vmem", "pallas-mxu", "pallas-grid", "bench-schema")
+
+DEFAULT_BASELINE = "lint_baseline.json"
+
+
+@dataclasses.dataclass
+class LintReport:
+    findings: List[Finding]
+    suppressed: List[Finding]
+    entries_run: List[str]
+
+    @property
+    def errors(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == Severity.ERROR]
+
+    @property
+    def exit_code(self) -> int:
+        return 1 if self.errors else 0
+
+    def render(self, verbose: bool = False) -> str:
+        lines = []
+        shown = self.findings if verbose else \
+            [f for f in self.findings if f.severity >= Severity.WARNING]
+        for f in sorted(shown, key=lambda f: (-f.severity, f.fingerprint)):
+            lines.append(f.render())
+        n_info = sum(1 for f in self.findings
+                     if f.severity == Severity.INFO)
+        lines.append(
+            f"repro.lint: {len(self.entries_run)} entries, "
+            f"{len(self.errors)} error(s), "
+            f"{sum(1 for f in self.findings if f.severity == Severity.WARNING)}"
+            f" warning(s), {n_info} info, "
+            f"{len(self.suppressed)} suppressed")
+        return "\n".join(lines)
+
+    def as_json(self) -> str:
+        def enc(f: Finding, suppressed: bool):
+            return {"fingerprint": f.fingerprint, "severity": str(f.severity),
+                    "entry": f.entry, "message": f.message,
+                    "detail": f.detail, "suppressed": suppressed}
+        return json.dumps(
+            {"entries": self.entries_run,
+             "findings": [enc(f, False) for f in self.findings]
+             + [enc(f, True) for f in self.suppressed]}, indent=2)
+
+
+def _match(name: str, globs: Optional[Sequence[str]]) -> bool:
+    return globs is None or any(fnmatch.fnmatchcase(name, g)
+                                for g in globs)
+
+
+def _entry_passes(entry: LintEntry, art: Artifacts,
+                  baseline: Baseline,
+                  pass_globs: Optional[Sequence[str]]) -> List[Finding]:
+    out: List[Finding] = []
+    meta = entry.meta
+
+    def want(p):
+        return _match(p, pass_globs)
+
+    if art.jaxpr is not None:
+        if want("jaxpr-dtype"):
+            out += jaxpr_passes.check_dtype_promotion(art.jaxpr, entry.name)
+        if want("jaxpr-hostsync"):
+            out += jaxpr_passes.check_host_sync(art.jaxpr, entry.name)
+    if art.hlo is not None:
+        if want("hlo-capacity-buffer") and meta.get("forbid_shapes"):
+            out += hlo_passes.check_forbidden_shapes(
+                art.hlo, entry.name, meta["forbid_shapes"])
+        if want("hlo-capacity-buffer") and meta.get("require_shapes"):
+            out += hlo_passes.check_required_shapes(
+                art.hlo, entry.name, meta["require_shapes"])
+        if want("hlo-collectives") and meta.get("collective_budget"):
+            out += hlo_passes.check_collective_budget(
+                art.hlo, entry.name, meta["collective_budget"])
+        if want("hlo-hbm") and meta.get("hbm_baseline"):
+            out += hlo_passes.check_hbm_bytes(
+                art.hlo, entry.name, baseline.hbm_bytes.get(entry.name))
+    for spec in art.kernel_specs:
+        if want("pallas-vmem"):
+            out += pallas_passes.check_vmem_footprint(
+                spec, entry.name,
+                meta.get("vmem_budget", pallas_passes.VMEM_BUDGET_BYTES))
+        if want("pallas-mxu"):
+            out += pallas_passes.check_mxu_alignment(spec, entry.name)
+        if want("pallas-grid"):
+            out += pallas_passes.check_grid_coverage(spec, entry.name)
+    return out
+
+
+def run_lint(*, entries: Optional[List[LintEntry]] = None,
+             entry_globs: Optional[Sequence[str]] = None,
+             pass_globs: Optional[Sequence[str]] = None,
+             baseline_path=None,
+             repo_root=None,
+             update_baselines: bool = False) -> LintReport:
+    """Run the suite. ``entry_globs``/``pass_globs``: fnmatch filters over
+    entry and pass names (None == all). ``update_baselines`` rewrites the
+    baseline file's ``hbm_bytes`` section from this run."""
+    repo_root = Path(repo_root) if repo_root else Path.cwd()
+    baseline_path = Path(baseline_path) if baseline_path \
+        else repo_root / DEFAULT_BASELINE
+    baseline = Baseline.load(baseline_path)
+
+    if entries is None:
+        entries = build_entries()
+    entries = [e for e in entries if _match(e.name, entry_globs)]
+
+    findings: List[Finding] = []
+    hlo_by_entry: Dict[str, str] = {}
+    ran: List[str] = []
+    arts: Dict[str, Artifacts] = {}
+    for entry in entries:
+        try:
+            art = entry.trace()
+        except Exception:  # noqa: BLE001 — one broken entry != dead lint
+            findings.append(Finding(
+                "runner", "trace-error", Severity.ERROR, entry.name,
+                "tracing the entry point raised",
+                traceback.format_exc(limit=5)))
+            continue
+        ran.append(entry.name)
+        arts[entry.name] = art
+        if art.hlo is not None:
+            hlo_by_entry[entry.name] = art.hlo
+
+    if update_baselines:
+        from ..launch import hlo_analysis as ha
+        for name, hlo in hlo_by_entry.items():
+            if next((e for e in entries if e.name == name),
+                    LintEntry(name, {}, lambda: None)
+                    ).meta.get("hbm_baseline"):
+                baseline.hbm_bytes[name] = ha.analyze_hlo(hlo).hbm_bytes
+        baseline.save(baseline_path)
+        baseline = Baseline.load(baseline_path)
+
+    for entry in entries:
+        if entry.name in arts:
+            findings += _entry_passes(entry, arts[entry.name], baseline,
+                                      pass_globs)
+
+    # global passes ------------------------------------------------------
+    for entry in entries:
+        if entry.meta.get("hbm_less_than") and _match("hlo-hbm",
+                                                      pass_globs or ["*"]):
+            findings += hlo_passes.check_hbm_ordering(
+                hlo_by_entry, entry.name, entry.meta["hbm_less_than"])
+    if _match("policy-retrace", pass_globs or ["*"]):
+        findings += jaxpr_passes.check_policy_retrace()
+    if _match("bench-schema", pass_globs or ["*"]):
+        findings += bench_schema.check_bench_files(repo_root)
+
+    kept, suppressed = [], []
+    for f in findings:
+        (suppressed if baseline.suppression_for(f) is not None
+         else kept).append(f)
+    return LintReport(findings=kept, suppressed=suppressed,
+                      entries_run=ran)

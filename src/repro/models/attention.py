@@ -8,15 +8,13 @@ which is the TPU-friendly structure (each block pair is an MXU matmul).
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import layers
-from .layers import Param, normal, zeros, ones
+from .layers import normal, zeros, ones
 
 NEG_INF = -1e30
 

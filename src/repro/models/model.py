@@ -8,13 +8,10 @@ launchers. Family routing:
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..configs.base import ModelConfig
 from . import layers as L
@@ -65,6 +62,11 @@ def transform_params_for_dualsparse(params, cfg: ModelConfig, calib_x,
     Prefer building a policy (``repro.core.policy``) and calling its
     ``prepare`` — that also returns the calibrated policy object that the
     rest of the stack (DistContext, engines, CLI) consumes."""
+    import warnings
+    warnings.warn(
+        "transform_params_for_dualsparse is deprecated; build a policy via "
+        "repro.core.policy.make_policy and call policy.prepare(...) instead",
+        DeprecationWarning, stacklevel=2)
     from ..core.policy import make_policy
     ds = cfg.dualsparse
     if not (cfg.is_moe and ds.enabled):

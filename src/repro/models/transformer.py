@@ -17,7 +17,6 @@ from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core import moe as moe_mod
@@ -25,7 +24,7 @@ from ..core import setp as setp_mod
 from . import attention as attn
 from . import layers as L
 from . import mamba2 as mm
-from .layers import Param, normal, ones, zeros
+from .layers import normal, ones
 
 
 @dataclasses.dataclass(frozen=True)

@@ -7,7 +7,6 @@ cross-attention to the encoder output. Layers scan over stacked params.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -4,7 +4,6 @@ shard_map path on an 8-device mesh, end to end via the serving engine."""
 import json
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config

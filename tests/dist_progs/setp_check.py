@@ -3,13 +3,11 @@ import json
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.core import moe, setp, reconstruct
 from repro.models.layers import split_params
 from repro.launch.mesh import make_mesh_auto, use_mesh
-import dataclasses
 
 
 def main():

@@ -12,7 +12,7 @@ import pytest
 try:
     import hypothesis
     import hypothesis.strategies as st
-    from hypothesis import given, settings
+    from hypothesis import given
 
     hypothesis.settings.register_profile(
         "ci", deadline=None, max_examples=20,
@@ -22,7 +22,7 @@ except ImportError:
     from _hypothesis_compat import st, given, settings  # noqa: F401
 
 from repro.core import dispatch as D
-from repro.core import drop, gating, moe, reconstruct, setp
+from repro.core import drop, gating, moe, setp
 from repro.core.policy import TwoTDrop
 from repro.kernels import ops as kops
 

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import drop, gating, moe, reconstruct
 
@@ -139,3 +138,20 @@ def test_2t_reconstruct_less_error_than_1t(rng, moe_cfg, moe_params,
     e1 = float(jnp.mean((y1 - y_full) ** 2))
     e2 = float(jnp.mean((y2 - y_full) ** 2))
     assert e2 <= e1 * 1.05, f"2T ({e2}) should not be worse than 1T ({e1})"
+
+
+def test_calibration_dtypes_pinned_under_x64(rng):
+    """Regression for the f32-explicit calibration math: even under
+    jax_enable_x64 (where bool-means and Python-float thresholds would
+    silently promote) every calibration output stays float32. The lint's
+    calib/threshold entry traces the same guarantee statically."""
+    scores = jax.random.uniform(rng, (16, 8), dtype=jnp.float32)
+    with jax.experimental.enable_x64():
+        t = drop.calibrate_threshold(scores, 0.3)
+        rates = drop.threshold_to_drop_rate(scores, [0.05, 0.1, 0.2])
+        per_layer = drop.calibrate_per_layer_thresholds([scores, scores],
+                                                        0.25)
+    assert t.dtype == jnp.float32
+    assert rates.dtype == jnp.float32
+    assert per_layer.dtype == jnp.float32
+    assert per_layer.shape == (2, 2)

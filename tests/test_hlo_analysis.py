@@ -1,8 +1,6 @@
 """The HLO text cost model: trip-count scaling, dot flops, collectives."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.launch.hlo_analysis import (analyze_hlo, count_shape_instructions,
                                        shape_elems_bytes, roofline_terms)
@@ -57,6 +55,59 @@ def test_count_shape_instructions():
     assert count_shape_instructions(hlo, (8, 16),
                                     exclude_ops=()) >= \
         count_shape_instructions(hlo, (8, 16))
+
+
+_TUPLE_HLO = """\
+ENTRY %main (p: f32[8,16]) -> (f32[8,16], s32[8,16]) {
+  %p = f32[8,16] parameter(0)
+  %i = s32[8,16] iota(), iota_dimension=1
+  ROOT %st = (f32[8,16], s32[8,16]) sort(%p, %i), dimensions={1}
+}
+"""
+
+
+def test_count_shape_instructions_tuple_results():
+    """A tuple-shaped result (sort, top_k) counts ONCE per instruction even
+    when several members match, and the dtype filter selects members."""
+    assert count_shape_instructions(_TUPLE_HLO, (8, 16)) == 2  # iota + sort
+    assert count_shape_instructions(_TUPLE_HLO, (8, 16), dtype="f32") == 1
+    assert count_shape_instructions(_TUPLE_HLO, (8, 16), dtype="s32") == 2
+
+
+_FUSED_HLO = """\
+%fused_computation (param_0: f32[4,8]) -> f32[4,8] {
+  %param_0 = f32[4,8] parameter(0)
+  %c = f32[] constant(2)
+  %b = f32[4,8] broadcast(%c), dimensions={}
+  ROOT %m = f32[4,8] multiply(%param_0, %b)
+}
+
+ENTRY %main (p: f32[4,8]) -> f32[4,8] {
+  %p = f32[4,8] parameter(0)
+  ROOT %fusion = f32[4,8] fusion(%p), kind=kLoop, calls=%fused_computation
+}
+"""
+
+
+def test_count_shape_instructions_sees_fusion_bodies():
+    """Instructions inside %fused_computation bodies count — a capacity
+    buffer hidden behind XLA fusion must not evade the gate."""
+    # broadcast + multiply (body) + the fusion instruction itself
+    assert count_shape_instructions(_FUSED_HLO, (4, 8)) == 3
+    # and on a real compile, where CPU XLA fuses the elementwise chain
+    def f(a):
+        return (a * 2.0 + 1.0).sum()
+
+    hlo = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((4, 8), jnp.float32)).compile().as_text()
+    assert count_shape_instructions(hlo, (4, 8)) >= 2
+
+
+def test_count_shape_instructions_dynamic_dims():
+    """Bounded-dynamic shapes (f32[<=8,16]) must not spuriously match the
+    static dims they bound — the counter is exact-static-shape only."""
+    line = "  %d = f32[<=8,16] custom-call(%p), custom_call_target=\"x\"\n"
+    assert count_shape_instructions(_TUPLE_HLO + line, (8, 16)) == 2
 
 
 def test_roofline_terms():

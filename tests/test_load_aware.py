@@ -69,3 +69,15 @@ def test_load_aware_drops_less_at_same_makespan(rng):
     dropped_la = float(1 - keep_la.mean())
     assert dropped_la < dropped_uniform
     assert ms_la <= ms_uniform * 1.02
+
+
+def test_load_aware_dtypes_pinned_under_x64():
+    """Regression for the f32-explicit histogram math: an int histogram
+    divided/averaged without the explicit casts would promote to f64 under
+    jax_enable_x64 (the lint's calib/load_aware entry checks the trace)."""
+    with jax.experimental.enable_x64():
+        hist = jnp.arange(8, dtype=jnp.int32)
+        loads = load_aware.device_loads(hist, 2)
+        ts = load_aware.step_down_thresholds(loads, 0.12)
+    assert loads.dtype == jnp.float32
+    assert ts.dtype == jnp.float32

@@ -106,3 +106,15 @@ def test_full_config_dims(arch):
 ])
 def test_param_counts_nominal(arch, lo, hi):
     assert lo < get_config(arch).n_params() < hi
+
+
+def test_transform_params_for_dualsparse_warns_deprecated(rng):
+    """The shim over SparsityPolicy.prepare must announce its deprecation
+    so remaining callers migrate to make_policy(...).prepare(...)."""
+    cfg = dataclasses.replace(get_config("olmoe-lite").reduced(),
+                              n_layers=1)
+    params = M.init_params(rng, cfg)
+    calib = jax.random.normal(rng, (8, cfg.d_model))
+    with pytest.warns(DeprecationWarning, match="make_policy"):
+        out = M.transform_params_for_dualsparse(params, cfg, calib)
+    assert set(out) == set(params)

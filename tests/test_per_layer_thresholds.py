@@ -1,10 +1,9 @@
 """Beyond-paper: per-layer threshold calibration (paper §5.3.3 future work)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
-from repro.core import drop, gating, moe
+from repro.core import drop, moe
 from repro.data import pipeline
 from repro.models import model as M
 

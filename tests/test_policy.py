@@ -10,7 +10,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core import drop, gating, moe, policy as pol_mod
+from repro.core import gating, moe
 from repro.core.policy import (POLICIES, LoadAwareTwoT, NoDrop, OneTDrop,
                                PerLayerCalibrated2T, TwoTDrop, make_policy)
 from repro.models import model as M

@@ -11,7 +11,7 @@ import numpy as np
 try:
     import hypothesis
     import hypothesis.strategies as st
-    from hypothesis import given, settings
+    from hypothesis import given
 
     hypothesis.settings.register_profile(
         "ci", deadline=None, max_examples=20,

@@ -1,6 +1,4 @@
 """Data pipeline, optimizer, checkpointing."""
-import os
-import tempfile
 
 import jax
 import jax.numpy as jnp

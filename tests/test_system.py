@@ -1,12 +1,10 @@
 """End-to-end behaviour of the DualSparse-MoE system (paper pipeline):
 pre-trained model -> profile -> reconstruct -> partial transform -> 2T-Drop
 serving, plus training convergence and the serving engine."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.data import pipeline
