@@ -27,7 +27,7 @@ from repro.configs import get_config
 from repro.data.pipeline import SyntheticLM
 from repro.models import model as M
 from repro.serving import (ContinuousBatchingEngine, GenerationConfig,
-                           ServingEngine)
+                           PagedEngine, ServingEngine)
 
 
 def make_traffic(cfg, n_requests, rate_hz, prompt_lens, out_lens, seed=0):
@@ -61,10 +61,11 @@ def _warm_sync(eng, cfg, batch_size, max_prompt):
 
 
 def run_sync(cfg, params, traffic, batch_size, max_prompt, max_new):
-    """Synchronized baseline under the same arrival process: requests are
-    served in arrival order in fixed batches; a batch launches once all its
-    members have arrived and the previous batch finished (the paper's
-    §5.3.2 setting, extended with arrival-time accounting)."""
+    """Synchronized baseline under the same arrival process (the paper's
+    §5.3.2 setting, extended with arrival-time accounting). The engine's own
+    convoy scheduler does the waiting: ``_ready()`` holds a batch until it
+    fills (or the trace is exhausted), and per-request budgets/EOS are
+    honored inside the decode loop — no driver-side chunking needed."""
     # exact_moe matches the continuous engine's dispatch setting so the
     # headline ratio measures scheduling, not a capacity handicap
     eng = ServingEngine(cfg, params, batch_size=batch_size,
@@ -72,34 +73,15 @@ def run_sync(cfg, params, traffic, batch_size, max_prompt, max_new):
                         exact_moe=True)
     _warm_sync(eng, cfg, batch_size, max_prompt)
     t0 = time.perf_counter()
-    done_tokens = 0
-    latencies = []
-    for lo in range(0, len(traffic), batch_size):
-        chunk = traffic[lo:lo + batch_size]
-        # cannot start before the last member of the batch arrives
-        ready_at = max(t for t, _, _ in chunk)
-        while time.perf_counter() - t0 < ready_at:
-            time.sleep(0.001)
-        # one synchronized generate with the chunk's max output budget
-        gen = GenerationConfig(max_new_tokens=max(g.max_new_tokens
-                                                  for _, _, g in chunk))
-        res = eng.generate([p for _, p, _ in chunk], gen)
-        finish = time.perf_counter() - t0
-        for (arr, _, g), r in zip(chunk, res):
-            # per-request tokens are capped at its own budget
-            kept = r.tokens[:g.max_new_tokens]
-            done_tokens += len(kept)
-            latencies.append(finish - arr)
+    res = eng.generate_timed(traffic)
     wall = time.perf_counter() - t0
-    return done_tokens / wall, latencies, wall
+    tokens = sum(len(r.tokens) for r in res)
+    latencies = [r.latency_s for r in res]
+    return tokens / wall, latencies, wall
 
 
-def run_continuous(cfg, params, traffic, slots, max_prompt, max_new):
-    eng = ContinuousBatchingEngine(cfg, params, n_slots=slots,
-                                   max_prompt_len=max_prompt,
-                                   max_new_tokens=max_new)
-    # warm: one request compiles prefill-insert + decode (fixed shapes cover
-    # all future traffic); stats reset so the report reflects the timed run
+def _run_timed(eng, traffic, max_prompt):
+    """Warm (compile at the traffic's fixed shapes), reset stats, replay."""
     eng.generate([np.zeros(max_prompt, np.int32)],
                  GenerationConfig(max_new_tokens=1))
     eng.reset_stats()
@@ -111,6 +93,21 @@ def run_continuous(cfg, params, traffic, slots, max_prompt, max_new):
     return tokens / wall, latencies, wall, eng
 
 
+def run_continuous(cfg, params, traffic, slots, max_prompt, max_new):
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=slots,
+                                   max_prompt_len=max_prompt,
+                                   max_new_tokens=max_new)
+    return _run_timed(eng, traffic, max_prompt)
+
+
+def run_paged(cfg, params, traffic, slots, max_prompt, max_new,
+              page_size, chunk_size):
+    eng = PagedEngine(cfg, params, n_slots=slots, page_size=page_size,
+                      chunk_size=chunk_size, max_prompt_len=max_prompt,
+                      max_new_tokens=max_new)
+    return _run_timed(eng, traffic, max_prompt)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mixtral-8x7b-lite")
@@ -120,6 +117,8 @@ def main():
                     help="Poisson arrival rate (requests/s)")
     ap.add_argument("--prompt-lens", default="8,24,48")
     ap.add_argument("--out-lens", default="4,12,24")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--chunk-size", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -145,6 +144,19 @@ def main():
           f"max_concurrency={eng.max_concurrency} "
           f"traces(prefill={eng.prefill_traces}, decode={eng.decode_traces}) "
           f"moe_overflow={moe_overflow(eng)}")
+
+    tps_p, lat_p, wall_p, peng = run_paged(
+        cfg, params, traffic, args.slots, max_prompt, max_new,
+        args.page_size, args.chunk_size)
+    m, p95 = lat_stats(lat_p)
+    print(f"paged       ({args.slots} slots): {tps_p:6.1f} tok/s  "
+          f"latency mean {m:.2f}s p95 {p95:.2f}s  wall {wall_p:.2f}s")
+    print(f"  scheduler: admitted={peng.n_admitted} "
+          f"chunk_steps={peng.chunk_steps} "
+          f"decode_steps={peng.decode_steps} "
+          f"prefix_hit_rate={peng.prefix_hit_rate:.2f} "
+          f"traces(chunk={peng.chunk_traces}, decode={peng.decode_traces}) "
+          f"moe_overflow={moe_overflow(peng)}")
 
     tps_s, lat_s, wall_s = run_sync(cfg, params, traffic, args.slots,
                                     max_prompt, max_new)

@@ -27,7 +27,7 @@ from repro.core.policy import POLICIES, make_policy
 from repro.data.pipeline import SyntheticLM, calibration_activations
 from repro.models import model as M
 from repro.serving import (ContinuousBatchingEngine, GenerationConfig,
-                           ServingEngine)
+                           PagedEngine, ServingEngine)
 
 
 def main():
@@ -35,16 +35,24 @@ def main():
     ap.add_argument("--arch", default="qwen3-moe-30b-a3b", choices=list_archs())
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--engine", default="sync",
-                    choices=("sync", "continuous"),
-                    help="synchronized batches vs slot-based continuous "
-                         "batching with mid-decode admission")
+                    choices=("sync", "continuous", "paged"),
+                    help="synchronized batches, slot-based continuous "
+                         "batching with mid-decode admission, or paged KV "
+                         "(page-table cache + chunked prefill + prefix cache)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--batch-size", type=int, default=8,
                     help="sync batch size / continuous slot count")
     ap.add_argument("--slots", type=int, default=0,
-                    help="continuous engine slot count (0 = --batch-size)")
+                    help="continuous/paged engine slot count "
+                         "(0 = --batch-size)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged engine: tokens per KV page")
+    ap.add_argument("--chunk-size", type=int, default=32,
+                    help="paged engine: prompt tokens per prefill chunk")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="paged engine: disable cross-request prefix reuse")
     ap.add_argument("--policy", default=None, choices=sorted(POLICIES),
                     help="sparsity policy (default: none)")
     ap.add_argument("--drop-target", type=float, default=None,
@@ -99,6 +107,12 @@ def main():
             cfg, params, n_slots=args.slots or args.batch_size,
             max_prompt_len=args.prompt_len, max_new_tokens=args.new_tokens,
             dist=dist)
+    elif args.engine == "paged":
+        eng = PagedEngine(
+            cfg, params, n_slots=args.slots or args.batch_size,
+            page_size=args.page_size, chunk_size=args.chunk_size,
+            max_prompt_len=args.prompt_len, max_new_tokens=args.new_tokens,
+            dist=dist, prefix_cache=not args.no_prefix_cache)
     else:
         eng = ServingEngine(cfg, params, batch_size=args.batch_size,
                             max_prompt_len=args.prompt_len,
@@ -116,6 +130,13 @@ def main():
               f"decode_steps={eng.decode_steps} "
               f"max_concurrency={eng.max_concurrency} "
               f"traces(prefill={eng.prefill_traces}, "
+              f"decode={eng.decode_traces})")
+    elif args.engine == "paged":
+        print(f"  slots={eng.n_slots} admitted={eng.n_admitted} "
+              f"chunk_steps={eng.chunk_steps} "
+              f"decode_steps={eng.decode_steps} "
+              f"prefix_hit_rate={eng.prefix_hit_rate:.2f} "
+              f"traces(chunk={eng.chunk_traces}, "
               f"decode={eng.decode_traces})")
     for r in results[:4]:
         print(f"  req{r.uid}: {r.tokens[:12]}...")

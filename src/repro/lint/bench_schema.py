@@ -1,10 +1,10 @@
 """Schema validation for the checked-in benchmark trajectory files.
 
-``BENCH_dispatch.json`` (flat, overwritten per run) and
-``BENCH_moe_pipeline.json`` (append-only ``runs`` trajectory) are consumed
-by CI gates and the README tables; a malformed append silently corrupts
-both. The bench scripts call these validators before writing, and the lint
-runs them over the repo's checked-in copies.
+``BENCH_dispatch.json`` / ``BENCH_serving_offline.json`` (flat, overwritten
+per run) and ``BENCH_moe_pipeline.json`` (append-only ``runs`` trajectory)
+are consumed by CI gates and the README tables; a malformed append silently
+corrupts them. The bench scripts call these validators before writing, and
+the lint runs them over the repo's checked-in copies.
 """
 from __future__ import annotations
 
@@ -34,6 +34,15 @@ PIPELINE_ROW = {"T": int, "E": int, "d": int, "f": int, "K": int, "P": int,
                 "buffer_hbm_bytes": _NUM, "fused_hbm_bytes": _NUM,
                 "buffer_capacity_buffers": int, "fused_capacity_buffers": int,
                 "rel_err_vs_oracle": _NUM, "overflow_pairs": int}
+
+
+SERVING_TOP = {"bench": str, "unit": str, "note": str, "host": dict,
+               "smoke": bool, "engines": list, "prefix_sweep": list}
+SERVING_ENGINE_ROW = {"engine": str, "requests": int, "tokens": int,
+                      "throughput_tok_s": _NUM, "wall_s": _NUM}
+SERVING_SWEEP_ROW = {"shared_prefix_frac": _NUM, "hit_rate": _NUM,
+                     "throughput_tok_s": _NUM, "chunk_steps": int,
+                     "prefill_tokens": int}
 
 
 def _check_keys(obj: Dict, schema: Dict, where: str) -> List[str]:
@@ -77,9 +86,34 @@ def validate_pipeline_bench(doc: Dict) -> List[str]:
     return errs
 
 
+def validate_serving_bench(doc: Dict) -> List[str]:
+    """Errors in a BENCH_serving_offline.json document (flat, overwritten).
+    ``engines`` must cover both KV layouts; ``prefix_sweep`` rows carry the
+    paged engine's hit-rate/throughput curve."""
+    errs = _check_keys(doc, SERVING_TOP, "top-level")
+    if isinstance(doc.get("host"), dict):
+        errs += _check_keys(doc["host"], HOST, "host")
+    names = set()
+    for i, row in enumerate(doc.get("engines", []) or []):
+        errs += _check_keys(row, SERVING_ENGINE_ROW, f"engines[{i}]")
+        if isinstance(row, dict):
+            names.add(row.get("engine"))
+    if doc.get("engines") and not {"contiguous", "paged"} <= names:
+        errs.append("engines: must include both 'contiguous' and 'paged' "
+                    f"rows (got {sorted(n for n in names if n)})")
+    for i, row in enumerate(doc.get("prefix_sweep", []) or []):
+        errs += _check_keys(row, SERVING_SWEEP_ROW, f"prefix_sweep[{i}]")
+        if isinstance(row, dict) and isinstance(row.get("hit_rate"), _NUM) \
+                and not 0.0 <= row["hit_rate"] <= 1.0:
+            errs.append(f"prefix_sweep[{i}]: hit_rate "
+                        f"{row['hit_rate']} outside [0, 1]")
+    return errs
+
+
 _VALIDATORS = {
     "BENCH_dispatch.json": validate_dispatch_bench,
     "BENCH_moe_pipeline.json": validate_pipeline_bench,
+    "BENCH_serving_offline.json": validate_serving_bench,
 }
 
 

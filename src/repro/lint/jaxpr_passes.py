@@ -117,6 +117,46 @@ def check_host_sync(jaxpr, entry: str) -> List[Finding]:
     return out
 
 
+def check_traced_leaves(jaxpr, entry: str, leaves) -> List[Finding]:
+    """Indirection arrays (page tables and friends) must enter a jitted
+    step as TRACED arguments. ``leaves`` is a list of (shape, dtype-name)
+    specs from the entry's meta; each must match an invar of the traced
+    jaxpr. A spec matching only a captured CONSTANT is the retrace hazard
+    this pass exists for: the constant's VALUE is baked into the
+    executable, so every allocator churn (page reuse, prefix hit,
+    eviction) silently recompiles the step."""
+    out: List[Finding] = []
+    if isinstance(jaxpr, jcore.ClosedJaxpr):
+        consts = [(tuple(np.shape(c)), np.dtype(
+            getattr(c, "dtype", type(c))).name) for c in jaxpr.consts]
+        jaxpr = jaxpr.jaxpr
+    else:
+        consts = [(tuple(v.aval.shape), _aval_dtype_name(v.aval))
+                  for v in jaxpr.constvars]
+    invars = [(tuple(v.aval.shape), _aval_dtype_name(v.aval))
+              for v in jaxpr.invars]
+    for spec in leaves:
+        shape, dtype = tuple(spec[0]), str(spec[1])
+        if (shape, dtype) in invars:
+            continue
+        if (shape, dtype) in consts:
+            out.append(Finding(
+                "jaxpr-traced-leaves", "leaf-captured-constant",
+                Severity.ERROR, entry,
+                f"{dtype}{list(shape)} leaf is a captured constant, not a "
+                f"traced argument",
+                "pass the array into the jitted step as an argument — as a "
+                "closure constant its value hashes into the jit cache key "
+                "and every page-table update recompiles"))
+        else:
+            out.append(Finding(
+                "jaxpr-traced-leaves", "leaf-missing", Severity.ERROR,
+                entry, f"no {dtype}{list(shape)} invar in the traced step",
+                "the entry's traced_leaves meta no longer matches the "
+                "step's signature — update the registry entry"))
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Retrace-hazard audit of the SparsityPolicy registry (global pass)
 # ---------------------------------------------------------------------------

@@ -13,6 +13,7 @@ Families (glob-friendly names):
   pipeline/{buffer,fused}  capacity-buffer oracle vs fused Pallas pipeline
   setp/<policy>            shard_map S-ETP forward (needs >= 2 devices)
   engine/{prefill_insert,decode}   continuous-batching jitted steps
+  engine/{chunk_insert,paged_decode,prefix_hit_insert}  paged-KV steps
   calib/{threshold,load_aware}     calibration math probed under x64
   kernel/<name>/<scenario>         production-scale KernelSpecs (no trace)
 """
@@ -211,6 +212,63 @@ def _engine_entries() -> List[LintEntry]:
             for which in ("prefill_insert", "decode")]
 
 
+def _paged_engine_entries(*, want_hlo: bool) -> List[LintEntry]:
+    """The paged serving engine's jitted steps. All three carry a
+    ``traced_leaves`` check on the page-table array: slot->page indirection
+    must enter the step as a TRACED argument, never a captured constant —
+    a constant page table re-hashes into a new executable on every
+    allocator churn (page reuse, prefix hit, eviction), silently
+    recompiling per admission."""
+    from ..configs import get_config
+    from ..models import model as M
+    from ..serving.paged import PagedEngine
+
+    cfg = get_config("qwen3-moe-30b-a3b").reduced()
+    params, _ = M.abstract_params_and_axes(cfg)
+    n_slots, lp, chunk, ps = 2, 16, 8, 4
+
+    def build(which: str, hlo: bool):
+        def trace():
+            eng = PagedEngine(cfg, params, n_slots=n_slots, page_size=ps,
+                              chunk_size=chunk, max_prompt_len=lp,
+                              max_new_tokens=8)
+            cache = jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                eng._cache)
+            pt = _sds((n_slots, eng.pages_per_slot), jnp.int32)
+            policy = eng._base_policy
+            if which == "paged_decode":
+                fn = eng._decode.__wrapped__
+                args = (params, _sds((n_slots, 1), jnp.int32), cache,
+                        _sds((n_slots,), jnp.bool_), pt, policy)
+            else:
+                # chunk_insert and prefix_hit_insert share ONE jitted step:
+                # a prefix hit only changes the traced ``start`` scalar and
+                # page-table values, so admission after a hit reuses the
+                # cold-path executable — both entries lock that contract.
+                fn = eng._chunk_insert.__wrapped__
+                args = (params, _sds((1, chunk), jnp.int32),
+                        _sds((), jnp.int32), _sds((), jnp.int32),
+                        _sds((), jnp.int32), cache, pt, policy)
+            return _jaxpr_and_hlo(fn, args, want_hlo=hlo)
+        return trace
+
+    pt_shape = [n_slots, -(-(lp + 8) // ps)]
+    entries = []
+    for which in ("chunk_insert", "paged_decode", "prefix_hit_insert"):
+        # prefix_hit_insert shares chunk_insert's executable — skip its
+        # (duplicate) compile and keep it as a jaxpr-only contract entry
+        hlo = want_hlo and which != "prefix_hit_insert"
+        meta = {"traced_leaves": [[pt_shape, "int32"]],
+                # single-device serving steps must stay collective-free: an
+                # all-gather of the page pool would defeat paging entirely
+                "collective_budget": {"all-gather": 0, "all-to-all": 0},
+                "hbm_baseline": hlo}
+        entries.append(LintEntry(name=f"engine/{which}", meta=meta,
+                                 _trace=build(which, hlo)))
+    return entries
+
+
 def _calib_entries(cfg) -> List[LintEntry]:
     """Calibration math, traced under jax_enable_x64: f32-explicit code
     stays clean, weak-type-dependent code lights the dtype pass up. These
@@ -317,6 +375,7 @@ def build_entries(*, include_hlo: bool = True,
             entries.append(_setp_entry(cfg, pol, n_dev))
     if include_engine:
         entries.extend(_engine_entries())
+        entries.extend(_paged_engine_entries(want_hlo=include_hlo))
     entries.extend(_calib_entries(cfg))
     entries.extend(_kernel_spec_entries())
     return entries

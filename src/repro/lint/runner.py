@@ -19,7 +19,8 @@ from . import bench_schema, hlo_passes, jaxpr_passes, pallas_passes
 from .findings import Baseline, Finding, Severity
 from .registry import Artifacts, LintEntry, build_entries
 
-PASS_NAMES = ("jaxpr-dtype", "jaxpr-hostsync", "policy-retrace",
+PASS_NAMES = ("jaxpr-dtype", "jaxpr-hostsync", "jaxpr-traced-leaves",
+              "policy-retrace",
               "hlo-capacity-buffer", "hlo-collectives", "hlo-hbm",
               "pallas-vmem", "pallas-mxu", "pallas-grid", "bench-schema")
 
@@ -86,6 +87,9 @@ def _entry_passes(entry: LintEntry, art: Artifacts,
             out += jaxpr_passes.check_dtype_promotion(art.jaxpr, entry.name)
         if want("jaxpr-hostsync"):
             out += jaxpr_passes.check_host_sync(art.jaxpr, entry.name)
+        if want("jaxpr-traced-leaves") and meta.get("traced_leaves"):
+            out += jaxpr_passes.check_traced_leaves(
+                art.jaxpr, entry.name, meta["traced_leaves"])
     if art.hlo is not None:
         if want("hlo-capacity-buffer") and meta.get("forbid_shapes"):
             out += hlo_passes.check_forbidden_shapes(

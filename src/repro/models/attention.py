@@ -8,6 +8,9 @@ which is the TPU-friendly structure (each block pair is an MXU matmul).
 """
 from __future__ import annotations
 
+import dataclasses
+import warnings
+from typing import Optional, Protocol, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -206,25 +209,6 @@ def gqa_attention(params, x, positions, cfg, *, causal=True, window=0,
     return jnp.einsum("bshgk,hgkd->bsd", o, params["wo"])
 
 
-def build_cache_from_seq(k, v, cap: int, window: int = 0,
-                         dtype=jnp.bfloat16):
-    """Turn full-sequence K/V (B,S,H,D) into a decode cache of capacity
-    ``cap`` (ring layout when windowed, matching kv_cache_insert)."""
-    B, S, H, D = k.shape
-    if window > 0:
-        w = min(cap, S)
-        slots = (S - w + jnp.arange(w)) % cap
-        kc = jnp.zeros((B, cap, H, D), dtype).at[:, slots].set(
-            k[:, S - w:].astype(dtype))
-        vc = jnp.zeros((B, cap, H, D), dtype).at[:, slots].set(
-            v[:, S - w:].astype(dtype))
-    else:
-        assert cap >= S, f"cache capacity {cap} < prefill length {S}"
-        kc = jnp.zeros((B, cap, H, D), dtype).at[:, :S].set(k.astype(dtype))
-        vc = jnp.zeros((B, cap, H, D), dtype).at[:, :S].set(v.astype(dtype))
-    return {"k": kc, "v": vc}
-
-
 def gqa_prefill_attention(params, x, positions, cfg, *, window=0, cap=None,
                           cache_dtype=jnp.bfloat16, dist=None):
     """Full-sequence attention that also returns the populated KV cache."""
@@ -237,28 +221,271 @@ def gqa_prefill_attention(params, x, positions, cfg, *, window=0, cap=None,
     else:
         o = plain_attention(q, k, v, causal=True, window=window)
     out = jnp.einsum("bshgk,hgkd->bsd", o, params["wo"])
-    cache = build_cache_from_seq(k, v, cap if cap else S, window, cache_dtype)
+    cache = ContiguousLayout(window).from_seq(k, v, cap if cap else S,
+                                              cache_dtype)
     return out, cache
 
 
 # ---------------------------------------------------------------------------
-# KV cache (full and sliding-window ring buffer)
+# KV cache layouts (KVCacheLayout protocol)
 #
 # Caches are plain arrays so they stack/scan over layers cleanly; the
-# absolute position `pos` is carried once at the model level and the window
-# size is a static argument.
+# absolute position `pos` is carried once at the model level. A *layout*
+# object owns the mapping from (slot, position) to physical storage:
+#
+#   ContiguousLayout — {"k": (B, cap, Hkv, D), "v": ...}: each batch slot
+#     owns a contiguous capacity-length row (ring buffer when windowed).
+#   PagedLayout — {"k": (n_pages, page_size, Hkv, D), "v": ...}: one shared
+#     pool of fixed-size pages; a per-slot *page table* (B, pages_per_slot)
+#     of physical page ids provides the indirection, so KV capacity is
+#     decoupled from the slot count and pages can be shared between slots
+#     (prefix caching). The page table is always a *traced* integer leaf —
+#     allocator churn changes values, never shapes, so nothing retraces.
+#
+# Layout objects are static (frozen dataclasses) and safe to close over in
+# jitted code.
 # ---------------------------------------------------------------------------
+
+class KVCacheLayout(Protocol):
+    """Protocol for decode-cache layouts (structural; both layouts below
+    conform). ``init`` signatures differ per layout (per-slot rows vs a
+    shared page pool) — see each class. ``page_table`` is accepted (and
+    ignored) by the contiguous layout so call sites stay branch-free."""
+
+    def read(self, cache, page_table=None, read_len: Optional[int] = None
+             ) -> Tuple[jax.Array, jax.Array]:
+        """Full (B, cap, Hkv, D) K/V views for batched decode. ``read_len``
+        (static) trims the view to its first ``read_len`` rows — bitwise
+        reproducibility across layouts requires attending over the SAME
+        static width (XLA's reduction grouping depends on the axis length,
+        so a wider zero-masked view is only ULP-equal, not bit-equal)."""
+        ...
+
+    def read_slot(self, cache, slot, page_table=None,
+                  read_len: Optional[int] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+        """One slot's (cap, Hkv, D) K/V view (chunked prefill)."""
+        ...
+
+    def append(self, cache, k_new, v_new, pos, page_table=None,
+               write_mask=None):
+        """Insert one decode step (B,1,Hkv,D) at per-slot positions."""
+        ...
+
+    def append_chunk(self, cache, k_chunk, v_chunk, slot, start, valid_len,
+                     page_table=None):
+        """Insert a (C,Hkv,D) prompt chunk for one slot at absolute
+        positions start..start+C-1 (rows >= valid_len dropped)."""
+        ...
+
+    def validity(self, pos_after, capacity: int):
+        """(valid, abs_pos) masks of cache entries after ``pos_after``."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class ContiguousLayout:
+    """Per-slot contiguous KV rows; ring buffer when ``window`` > 0.
+
+    The adapter over the original cache dict — every pre-layout call site
+    (decode, prefill capture, windowed decode) maps onto these methods."""
+    window: int = 0
+
+    def init(self, batch: int, length: int, n_kv: int, head_dim: int,
+             dtype=jnp.bfloat16):
+        """{"k": (B, length, Hkv, D), "v": ...}; ``length`` is the window
+        size for windowed decode or the full context length otherwise."""
+        return {"k": jnp.zeros((batch, length, n_kv, head_dim), dtype),
+                "v": jnp.zeros((batch, length, n_kv, head_dim), dtype)}
+
+    def from_seq(self, k, v, cap: int, dtype=jnp.bfloat16):
+        """Turn full-sequence K/V (B,S,H,D) into a decode cache of capacity
+        ``cap`` (ring layout when windowed, matching ``append``)."""
+        B, S, H, D = k.shape
+        if self.window > 0:
+            w = min(cap, S)
+            slots = (S - w + jnp.arange(w)) % cap
+            kc = jnp.zeros((B, cap, H, D), dtype).at[:, slots].set(
+                k[:, S - w:].astype(dtype))
+            vc = jnp.zeros((B, cap, H, D), dtype).at[:, slots].set(
+                v[:, S - w:].astype(dtype))
+        else:
+            assert cap >= S, f"cache capacity {cap} < prefill length {S}"
+            kc = jnp.zeros((B, cap, H, D), dtype).at[:, :S].set(
+                k.astype(dtype))
+            vc = jnp.zeros((B, cap, H, D), dtype).at[:, :S].set(
+                v.astype(dtype))
+        return {"k": kc, "v": vc}
+
+    def slot_index(self, pos, capacity: int):
+        """Physical row of absolute position ``pos`` (ring when windowed)."""
+        return pos % capacity if self.window > 0 else pos
+
+    def read(self, cache, page_table=None, read_len=None):
+        if read_len is not None:
+            return cache["k"][:, :read_len], cache["v"][:, :read_len]
+        return cache["k"], cache["v"]
+
+    def read_slot(self, cache, slot, page_table=None, read_len=None):
+        k = jax.lax.dynamic_index_in_dim(cache["k"], slot, 0, False)
+        v = jax.lax.dynamic_index_in_dim(cache["v"], slot, 0, False)
+        if read_len is not None:
+            return k[:read_len], v[:read_len]
+        return k, v
+
+    def append(self, cache, k_new, v_new, pos, page_table=None,
+               write_mask=None):
+        """Insert one step (B,1,Hkv,D) at absolute position ``pos`` — a
+        scalar (whole batch at one position) or a (B,) vector of per-slot
+        ragged positions (out-of-capacity or ``~write_mask`` writes are
+        dropped)."""
+        cap = cache["k"].shape[1]
+        idx = self.slot_index(pos, cap)
+        if jnp.ndim(pos) == 1:
+            if write_mask is not None:
+                idx = jnp.where(write_mask, idx, cap)
+            b = jnp.arange(k_new.shape[0])
+            k = cache["k"].at[b, idx].set(
+                k_new[:, 0].astype(cache["k"].dtype), mode="drop")
+            v = cache["v"].at[b, idx].set(
+                v_new[:, 0].astype(cache["v"].dtype), mode="drop")
+            return {"k": k, "v": v}
+        k = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, idx, 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, idx, 0, 0))
+        return {"k": k, "v": v}
+
+    def append_chunk(self, cache, k_chunk, v_chunk, slot, start, valid_len,
+                     page_table=None):
+        assert self.window == 0, "chunked prefill needs a non-ring layout"
+        cap = cache["k"].shape[1]
+        C = k_chunk.shape[0]
+        i = jnp.arange(C)
+        rows = jnp.where(i < valid_len, start + i, cap)       # drop invalid
+        k = cache["k"].at[slot, rows].set(
+            k_chunk.astype(cache["k"].dtype), mode="drop")
+        v = cache["v"].at[slot, rows].set(
+            v_chunk.astype(cache["v"].dtype), mode="drop")
+        return {"k": k, "v": v}
+
+    def validity(self, pos_after, capacity: int):
+        return _cache_validity(pos_after, capacity, self.window)
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Block-granular KV cache: a pool of ``page_size``-token pages shared
+    by all slots, addressed through a per-slot page table of physical page
+    ids. Page 0 is conventionally a write sink ("trash page") for retired
+    slots, so scheduler churn never needs a masked jit. Windowed (ring)
+    caches are not supported — paging already bounds memory."""
+    page_size: int
+
+    def init(self, n_pages: int, n_kv: int, head_dim: int,
+             dtype=jnp.bfloat16):
+        """{"k": (n_pages, page_size, Hkv, D), "v": ...} — ONE pool; slots
+        come from the page table, not from a batch axis."""
+        return {"k": jnp.zeros((n_pages, self.page_size, n_kv, head_dim),
+                               dtype),
+                "v": jnp.zeros((n_pages, self.page_size, n_kv, head_dim),
+                               dtype)}
+
+    def slot_index(self, pos):
+        """(logical page, in-page offset) of absolute position ``pos``."""
+        return pos // self.page_size, pos % self.page_size
+
+    def _gather(self, a, ids, lead, read_len):
+        if read_len is not None:         # gather only the pages we need
+            ids = ids[..., :-(-read_len // self.page_size)]
+        g = jnp.take(a, ids.reshape(-1), axis=0)
+        g = g.reshape(lead + (ids.shape[-1] * self.page_size,)
+                      + a.shape[2:])
+        if read_len is not None:
+            g = g[..., :read_len, :, :] if lead else g[:read_len]
+        return g
+
+    def read(self, cache, page_table=None, read_len=None):
+        """(B, pages_per_slot * page_size, Hkv, D) gathered views (trimmed
+        to ``read_len`` rows when given — fewer pages gathered AND a view
+        width that bit-matches a contiguous cache of that capacity)."""
+        B = page_table.shape[0]
+        return (self._gather(cache["k"], page_table, (B,), read_len),
+                self._gather(cache["v"], page_table, (B,), read_len))
+
+    def read_slot(self, cache, slot, page_table=None, read_len=None):
+        row = jax.lax.dynamic_index_in_dim(page_table, slot, 0, False)
+        return (self._gather(cache["k"], row, (), read_len),
+                self._gather(cache["v"], row, (), read_len))
+
+    def append(self, cache, k_new, v_new, pos, page_table=None,
+               write_mask=None):
+        """One decode step at per-slot positions ``pos`` (B,): the write
+        lands at page_table[b, pos//ps][pos%ps]; slots beyond their table
+        or outside ``write_mask`` are dropped."""
+        n_pages = cache["k"].shape[0]
+        n_logical = page_table.shape[1]
+        page, off = self.slot_index(pos)
+        phys = jnp.take_along_axis(
+            page_table, jnp.minimum(page, n_logical - 1)[:, None],
+            axis=1)[:, 0]
+        phys = jnp.where(page < n_logical, phys, n_pages)
+        if write_mask is not None:
+            phys = jnp.where(write_mask, phys, n_pages)
+        k = cache["k"].at[phys, off].set(
+            k_new[:, 0].astype(cache["k"].dtype), mode="drop")
+        v = cache["v"].at[phys, off].set(
+            v_new[:, 0].astype(cache["v"].dtype), mode="drop")
+        return {"k": k, "v": v}
+
+    def append_chunk(self, cache, k_chunk, v_chunk, slot, start, valid_len,
+                     page_table=None):
+        n_pages = cache["k"].shape[0]
+        row = jax.lax.dynamic_index_in_dim(page_table, slot, 0, False)
+        n_logical = row.shape[0]
+        C = k_chunk.shape[0]
+        i = jnp.arange(C)
+        page, off = self.slot_index(start + i)
+        phys = row[jnp.minimum(page, n_logical - 1)]
+        phys = jnp.where((i < valid_len) & (page < n_logical), phys, n_pages)
+        k = cache["k"].at[phys, off].set(
+            k_chunk.astype(cache["k"].dtype), mode="drop")
+        v = cache["v"].at[phys, off].set(
+            v_chunk.astype(cache["v"].dtype), mode="drop")
+        return {"k": k, "v": v}
+
+    def validity(self, pos_after, capacity: int):
+        return _cache_validity(pos_after, capacity, 0)
+
+
+# -- deprecated free-function shims (pre-KVCacheLayout API) -----------------
 
 def init_kv_cache(batch: int, length: int, n_kv: int, head_dim: int,
                   dtype=jnp.bfloat16):
-    """Returns {"k": (B, W, Hkv, D), "v": ...}. ``length`` is the window size
-    for windowed decode or the full context length otherwise."""
-    return {"k": jnp.zeros((batch, length, n_kv, head_dim), dtype),
-            "v": jnp.zeros((batch, length, n_kv, head_dim), dtype)}
+    """DEPRECATED shim: use ``ContiguousLayout(window).init(...)``."""
+    warnings.warn(
+        "init_kv_cache is deprecated; use ContiguousLayout(window).init(...)"
+        " (KVCacheLayout API)", DeprecationWarning, stacklevel=2)
+    return ContiguousLayout().init(batch, length, n_kv, head_dim, dtype)
+
+
+def build_cache_from_seq(k, v, cap: int, window: int = 0,
+                         dtype=jnp.bfloat16):
+    """DEPRECATED shim: use ``ContiguousLayout(window).from_seq(...)``."""
+    warnings.warn(
+        "build_cache_from_seq is deprecated; use "
+        "ContiguousLayout(window).from_seq(...) (KVCacheLayout API)",
+        DeprecationWarning, stacklevel=2)
+    return ContiguousLayout(window).from_seq(k, v, cap, dtype)
 
 
 def _cache_slot(pos, capacity: int, window: int):
-    return pos % capacity if window > 0 else pos
+    """DEPRECATED shim: use ``ContiguousLayout(window).slot_index(...)``."""
+    warnings.warn(
+        "_cache_slot is deprecated; use "
+        "ContiguousLayout(window).slot_index(pos, capacity)",
+        DeprecationWarning, stacklevel=2)
+    return ContiguousLayout(window).slot_index(pos, capacity)
 
 
 def _cache_validity(pos_after, capacity: int, window: int):
@@ -284,21 +511,9 @@ def _cache_validity(pos_after, capacity: int, window: int):
 def kv_cache_insert(cache, k_new, v_new, pos, window: int = 0):
     """Insert one step (B,1,Hkv,D) at absolute position ``pos`` — a scalar
     (whole batch at one position) or a (B,) vector of per-slot ragged
-    positions (out-of-capacity writes are dropped)."""
-    cap = cache["k"].shape[1]
-    idx = _cache_slot(pos, cap, window)
-    if jnp.ndim(pos) == 1:
-        b = jnp.arange(k_new.shape[0])
-        k = cache["k"].at[b, idx].set(k_new[:, 0].astype(cache["k"].dtype),
-                                      mode="drop")
-        v = cache["v"].at[b, idx].set(v_new[:, 0].astype(cache["v"].dtype),
-                                      mode="drop")
-        return {"k": k, "v": v}
-    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
-                                     (0, idx, 0, 0))
-    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
-                                     (0, idx, 0, 0))
-    return {"k": k, "v": v}
+    positions (out-of-capacity writes are dropped). Thin alias for
+    ``ContiguousLayout(window).append``."""
+    return ContiguousLayout(window).append(cache, k_new, v_new, pos)
 
 
 def _valid_mask(valid, rank: int):
@@ -309,24 +524,82 @@ def _valid_mask(valid, rank: int):
     return valid.reshape(lead + (1,) * (rank - 2) + valid.shape[-1:])
 
 
-def gqa_decode_attention(params, x, cache, pos, cfg, window: int = 0):
+def _attend_cache(q, k_view, v_view, mask):
+    """Softmax attention of q (B,Sq,Hkv,G,D) over cache views (B,T,Hkv,D)
+    under a boolean ``mask`` broadcastable to the (B,Sq,Hkv,G,T) scores —
+    the shared math of the decode and chunk-prefill paths. Op-for-op
+    identical to ``plain_attention`` (same einsum specs, same divide-by-
+    sqrt) so a float32 cache makes chunked prefill BIT-identical to the
+    monolithic prefill: masked cache rows score exactly NEG_INF, exp to
+    exactly 0, and contribute exact zeros to the softmax sum and the p@v
+    contraction."""
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", q, k_view,
+                   preferred_element_type=jnp.float32) / np.sqrt(q.shape[-1])
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v_view.dtype)
+    return jnp.einsum("bqhgk,bkhd->bqhgd", p, v_view)
+
+
+def gqa_decode_attention(params, x, cache, pos, cfg, window: int = 0, *,
+                         layout: Optional[KVCacheLayout] = None,
+                         page_table=None, write_mask=None, read_len=None):
     """One-token decode: x (B,1,d) against the cache at absolute position
     ``pos`` — a scalar, or a (B,) vector of per-slot positions (continuous
-    batching over ragged requests). Returns (out, new_cache)."""
+    batching over ragged requests). Returns (out, new_cache).
+
+    ``layout`` selects the cache storage (default ``ContiguousLayout(window)``
+    for the legacy call sites); paged layouts also need ``page_table``
+    (B, pages_per_slot) int32. ``write_mask`` (B,) bool suppresses the KV
+    write for inactive slots (their query still runs, output is discarded by
+    the caller) — required when decode interleaves with chunked prefill so a
+    mid-prefill slot's page is not corrupted by the batched decode write."""
+    if layout is None:
+        layout = ContiguousLayout(window)
     B = x.shape[0]
     pos = jnp.asarray(pos, jnp.int32)
     posb = pos[:, None] if pos.ndim == 1 else jnp.full((B, 1), pos, jnp.int32)
     if cfg.mrope_sections:
         posb = jnp.broadcast_to(posb[None], (3,) + posb.shape)
     q, k_new, v_new = gqa_project_qkv(params, x, posb, cfg)
-    cache = kv_cache_insert(cache, k_new, v_new, pos, window)
-    valid, _ = _cache_validity(pos + 1, cache["k"].shape[1], window)
-    scale = 1.0 / np.sqrt(q.shape[-1])
-    s = jnp.einsum("bqhgk,bthk->bqhgt", q, cache["k"],
-                   preferred_element_type=jnp.float32) * scale
-    s = jnp.where(_valid_mask(valid, s.ndim), s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1).astype(cache["v"].dtype)
-    o = jnp.einsum("bqhgt,bthk->bqhgk", p, cache["v"])
+    cache = layout.append(cache, k_new, v_new, pos, page_table=page_table,
+                          write_mask=write_mask)
+    k_view, v_view = layout.read(cache, page_table=page_table,
+                                 read_len=read_len)
+    valid, _ = layout.validity(pos + 1, k_view.shape[1])
+    o = _attend_cache(q, k_view, v_view, _valid_mask(valid, 5))
+    return jnp.einsum("bshgk,hgkd->bsd", o, params["wo"]), cache
+
+
+def gqa_chunk_attention(params, x, cache, slot, start, valid_len, cfg, *,
+                        layout: KVCacheLayout, page_table=None,
+                        read_len=None):
+    """Chunked-prefill attention for ONE slot: x (1,C,d) holds prompt tokens
+    at absolute positions start..start+C-1 (rows >= ``valid_len`` are
+    padding). Appends the chunk's K/V into the cache, then attends each
+    chunk query over the slot's cache prefix (earlier chunks + this one,
+    causally). Returns (out (1,C,d), new_cache).
+
+    Fixed-shape by construction: C is static, ``slot``/``start``/
+    ``valid_len`` are traced scalars, so one jit serves every chunk of every
+    prompt."""
+    C = x.shape[1]
+    positions = start + jnp.arange(C, dtype=jnp.int32)[None, :]     # (1, C)
+    posb = positions
+    if cfg.mrope_sections:
+        posb = jnp.broadcast_to(posb[None], (3,) + posb.shape)
+    q, k_new, v_new = gqa_project_qkv(params, x, posb, cfg)
+    cache = layout.append_chunk(cache, k_new[0], v_new[0], slot, start,
+                                valid_len, page_table=page_table)
+    k_slot, v_slot = layout.read_slot(cache, slot, page_table=page_table,
+                                      read_len=read_len)
+    k_view, v_view = k_slot[None], v_slot[None]                 # (1,T,Hkv,D)
+    # query i (abs pos start+i) sees cache rows with abs pos <= start+i that
+    # hold real tokens; rows of this chunk past valid_len were dropped, so
+    # bounding by the query's own position suffices.
+    q_abs = start + jnp.arange(C)                               # (C,)
+    k_abs = jnp.arange(k_view.shape[1])                         # (T,)
+    mask = (k_abs[None, :] <= q_abs[:, None])[None, :, None, None, :]
+    o = _attend_cache(q, k_view, v_view, mask)
     return jnp.einsum("bshgk,hgkd->bsd", o, params["wo"]), cache
 
 
@@ -443,7 +716,7 @@ def mla_decode_attention(params, x, cache, pos, cfg, window: int = 0):
     kr_new = layers.apply_rope(kr_new[..., None, :], posb,
                                cfg.rope_theta)[..., 0, :]
     cap = cache["c"].shape[1]
-    idx = _cache_slot(pos, cap, window)
+    idx = ContiguousLayout(window).slot_index(pos, cap)
     if per_slot:
         b = jnp.arange(B)
         c_kv = cache["c"].at[b, idx].set(

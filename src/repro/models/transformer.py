@@ -223,9 +223,11 @@ def block_forward(bp, x, positions, cfg, *, window: int = 0,
 
 
 def block_decode(bp, x, cache_layer, pos, cfg, *, window: int = 0,
-                 dist: Optional[DistContext] = None):
+                 dist: Optional[DistContext] = None, layout=None,
+                 page_table=None, write_mask=None, read_len=None):
     """One-token decode. cache_layer is this layer's cache dict slice.
-    Returns (x, cache_layer, moe_overflow)."""
+    Returns (x, cache_layer, moe_overflow). ``layout``/``page_table``/
+    ``write_mask`` select the KV storage (see gqa_decode_attention)."""
     no_overflow = jnp.zeros((), jnp.int32)
     if cfg.family == "ssm" or "mamba" in bp:
         h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
@@ -238,7 +240,9 @@ def block_decode(bp, x, cache_layer, pos, cfg, *, window: int = 0,
             bp["attn"], h, cache_layer, pos, cfg, window)
     else:
         y, cache_layer = attn.gqa_decode_attention(
-            bp["attn"], h, cache_layer, pos, cfg, window)
+            bp["attn"], h, cache_layer, pos, cfg, window,
+            layout=layout, page_table=page_table, write_mask=write_mask,
+            read_len=read_len)
     x = x + y
     h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
     overflow = no_overflow
@@ -386,7 +390,8 @@ def _hybrid_forward(params, x, positions, cfg, *, window: int = 0,
 
 
 def stack_decode(params, x, cache, pos, cfg, *, window: int = 0,
-                 dist: Optional[DistContext] = None):
+                 dist: Optional[DistContext] = None, layout=None,
+                 page_table=None, write_mask=None, read_len=None):
     """One-token decode through all blocks. cache: layer-stacked dict."""
     if cfg.family == "hybrid":
         return _hybrid_decode(params, x, cache, pos, cfg, window=window,
@@ -395,7 +400,9 @@ def stack_decode(params, x, cache, pos, cfg, *, window: int = 0,
     def body(h, xs):
         bp, cl = xs
         h, cl, of = block_decode(bp, h, cl, pos, cfg, window=window,
-                                 dist=dist)
+                                 dist=dist, layout=layout,
+                                 page_table=page_table,
+                                 write_mask=write_mask, read_len=read_len)
         return h, (cl, of)
 
     x, (new_layers, ofs) = jax.lax.scan(
@@ -511,17 +518,90 @@ def prefill(params, batch, cfg, *, cache_len: int = 0, window: int = 0,
 
 
 def decode_step(params, token, cache, cfg, *, window: int = 0,
-                dist: Optional[DistContext] = None):
+                dist: Optional[DistContext] = None, layout=None,
+                page_table=None, write_mask=None, read_len=None):
     """token: (B,1) -> (logits (B,1,vocab), new cache). cache carries 'pos' —
     a scalar shared by the batch (synchronized decode) or a (B,) vector of
-    per-slot positions (continuous batching over ragged requests)."""
+    per-slot positions (continuous batching over ragged requests).
+
+    ``layout``/``page_table`` select the KV storage: with a ``PagedLayout``
+    the cache holds one page pool per layer and ``page_table`` (B, P) int32
+    maps each slot's logical pages to physical ones. ``write_mask`` (B,)
+    suppresses KV writes for inactive slots (their pos still advances; the
+    engine owns per-slot positions)."""
     pos = cache["pos"]
     x = L.embed(params["embed"], token)
     x, new_cache = stack_decode(params, x, cache, pos, cfg, window=window,
-                                dist=dist)
+                                dist=dist, layout=layout,
+                                page_table=page_table, write_mask=write_mask,
+                                read_len=read_len)
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = L.unembed(params["embed"], x)
     new_cache["pos"] = pos + 1
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill (one slot, fixed-shape chunks)
+# ---------------------------------------------------------------------------
+
+def chunk_block(bp, x, cache_layer, slot, start, valid_len, cfg, *,
+                layout, page_table=None, read_len=None,
+                dist: Optional[DistContext] = None):
+    """One block over a (1,C,d) prompt chunk of a single slot, appending its
+    K/V into the decode cache. Returns (x, cache_layer, moe_overflow)."""
+    h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+    y, cache_layer = attn.gqa_chunk_attention(
+        bp["attn"], h, cache_layer, slot, start, valid_len, cfg,
+        layout=layout, page_table=page_table, read_len=read_len)
+    x = x + y
+    h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+    overflow = jnp.zeros((), jnp.int32)
+    if "moe" in bp:
+        y, _, overflow = _moe_forward(bp["moe"], h, cfg, dist)
+        x = x + y
+    else:
+        x = x + L.apply_mlp(bp["mlp"], h, cfg.mlp_kind)
+    return x, cache_layer, overflow
+
+
+def chunk_step(params, tokens, slot, start, valid_len, cache, cfg, *,
+               layout, page_table=None, read_len=None,
+               dist: Optional[DistContext] = None):
+    """Advance ONE slot's prompt by a fixed-size chunk.
+
+    tokens: (1, C) prompt tokens at absolute positions start..start+C-1
+    (rows >= ``valid_len`` are padding: their K/V writes are dropped and
+    their logits are garbage the caller must ignore). Returns
+    (logits (1, C, vocab), new cache) with cache['pos'][slot] advanced to
+    start + valid_len.
+
+    C is static; slot/start/valid_len are traced scalars — one jit serves
+    every chunk of every prompt. Only gqa-attention, non-windowed families
+    support chunked prefill (ssm/hybrid state and MLA latent caches have no
+    per-slot chunk insert)."""
+    assert cfg.family not in ("ssm", "hybrid") and cfg.attn_kind != "mla", \
+        "chunked prefill requires gqa attention"
+    slot = jnp.asarray(slot, jnp.int32)
+    start = jnp.asarray(start, jnp.int32)
+    valid_len = jnp.asarray(valid_len, jnp.int32)
+    x = L.embed(params["embed"], tokens)
+
+    def body(h, xs):
+        bp, cl = xs
+        h, cl, of = chunk_block(bp, h, cl, slot, start, valid_len, cfg,
+                                layout=layout, page_table=page_table,
+                                read_len=read_len, dist=dist)
+        return h, (cl, of)
+
+    x, (new_layers, ofs) = jax.lax.scan(
+        body, x, (params["blocks"], cache["layers"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)
+    new_cache = {"layers": new_layers,
+                 "pos": cache["pos"].at[slot].set(start + valid_len)}
+    if "moe_overflow" in cache:
+        new_cache["moe_overflow"] = cache["moe_overflow"] + jnp.sum(ofs)
     return logits, new_cache
 
 
@@ -538,7 +618,8 @@ def init_cache(cfg, batch: int, context_len: int, *, window: int = 0,
     hd = cfg.resolved_head_dim
 
     def one_attn():
-        return attn.init_kv_cache(batch, cap, cfg.n_kv_heads, hd, dtype)
+        return attn.ContiguousLayout(window).init(batch, cap, cfg.n_kv_heads,
+                                                  hd, dtype)
 
     def one_mamba():
         st = mm.init_mamba_state(batch, cfg, jnp.float32)
@@ -570,5 +651,25 @@ def init_cache(cfg, batch: int, context_len: int, *, window: int = 0,
     cache["pos"] = jnp.zeros((batch,) if per_slot_pos else (), jnp.int32)
     # running count of token-expert pairs dropped by dispatch-capacity
     # overflow (accumulated by decode steps; serving engines surface it)
+    cache["moe_overflow"] = jnp.zeros((), jnp.int32)
+    return cache
+
+
+def init_paged_cache(cfg, n_pages: int, page_size: int, n_slots: int, *,
+                     dtype=jnp.bfloat16):
+    """Layer-stacked PAGED decode cache: one (n_pages, page_size, Hkv, D)
+    pool per layer, shared by all slots through a per-slot page table the
+    engine owns (the same logical->physical mapping applies to every
+    layer). Physical page 0 is reserved as the write sink for retired
+    slots. cache['pos'] is always per-slot (n_slots,)."""
+    assert cfg.family not in ("ssm", "hybrid") and cfg.attn_kind != "mla", \
+        "paged KV requires gqa attention"
+    layout = attn.PagedLayout(page_size)
+    hd = cfg.resolved_head_dim
+    cache = {"layers": jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[layout.init(n_pages, cfg.n_kv_heads, hd, dtype)
+          for _ in range(cfg.n_layers)])}
+    cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
     cache["moe_overflow"] = jnp.zeros((), jnp.int32)
     return cache

@@ -1,3 +1,5 @@
-from .engine import (ContinuousBatchingEngine, GenerationConfig, Result,
-                     ServingEngine, exact_moe_dist,
-                     merge_policy_override)  # noqa: F401
+from .api import (Engine, EngineBase, GenerationConfig, Request,
+                  Result)  # noqa: F401
+from .engine import (ContinuousBatchingEngine, ServingEngine,
+                     exact_moe_dist, merge_policy_override)  # noqa: F401
+from .paged import PagedEngine, PageAllocator  # noqa: F401

@@ -1,0 +1,224 @@
+"""Unified serving request API (paper §4).
+
+Every engine — synchronized-batch, continuous-batching, paged — speaks the
+same request lifecycle:
+
+    uid = engine.submit(prompt, gen)     # enqueue (validated, never blocks)
+    while engine.step(): ...             # advance one scheduler iteration
+    results = engine.drain()             # run to completion, collect Results
+
+``Request`` is the canonical unit of work (prompt tokens + per-request
+``GenerationConfig`` + optional arrival time for replayed traces); ``Result``
+is the canonical outcome. ``Engine`` is the structural protocol benchmarks
+and launchers program against; ``EngineBase`` supplies the shared lifecycle
+(uid allocation, result bookkeeping, ``run``/``drain``/``generate``/
+``generate_timed``) so concrete engines only implement admission + ``step``.
+
+Scheduling semantics stay engine-specific: the synchronized engine's
+``step()`` serves one convoy batch to completion, the continuous/paged
+engines' ``step()`` is one admit+decode iteration. ``generate_timed`` drives
+either through the same loop via two hooks: ``_has_work()`` (anything queued
+or in flight) and ``_ready()`` (worth stepping now, e.g. the synchronized
+engine waits for a full convoy until the trace is exhausted).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import (Deque, Dict, List, Optional, Protocol, Sequence, Tuple,
+                    runtime_checkable)
+
+import numpy as np
+
+from ..core.policy import SparsityPolicy
+
+
+@dataclasses.dataclass
+class GenerationConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0          # 0 => greedy
+    eos_token: int = -1               # -1 => never stop early
+    seed: int = 0
+    # per-request sparsity-policy override. Engines require the SAME policy
+    # family (pytree structure) as their base policy — only threshold
+    # *values* may differ, so co-batched requests decode in one jitted step
+    # with per-slot thresholds and nothing retraces.
+    policy: Optional[SparsityPolicy] = None
+
+
+@dataclasses.dataclass
+class Request:
+    """One unit of serving work: prompt tokens, generation settings, and an
+    optional arrival time (seconds on the engine clock) for trace replay."""
+    prompt: np.ndarray
+    gen: GenerationConfig = dataclasses.field(default_factory=GenerationConfig)
+    arrival: float = 0.0
+
+
+@dataclasses.dataclass
+class Result:
+    uid: int
+    tokens: List[int]
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    submitted_s: float = 0.0          # arrival time (timed runs)
+    finished_s: float = 0.0           # completion time (timed runs)
+
+    @property
+    def latency_s(self) -> float:
+        return self.finished_s - self.submitted_s
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """Structural protocol every serving engine implements."""
+
+    def submit(self, prompt, gen: Optional[GenerationConfig] = None) -> int:
+        """Enqueue one request; returns its uid."""
+        ...
+
+    def step(self) -> bool:
+        """Advance the scheduler one iteration; True while work may remain."""
+        ...
+
+    def drain(self) -> List[Result]:
+        """Run until idle; return Results not yet drained, submission order."""
+        ...
+
+    def result(self, uid: int) -> Result:
+        ...
+
+
+class EngineBase:
+    """Shared request lifecycle for serving engines.
+
+    Subclass contract:
+      * ``_validate(req)`` — raise on inadmissible requests (called by
+        ``submit`` before the uid is allocated).
+      * ``step()`` — pop work from ``self._queue`` (deque of
+        ``(uid, Request)``), advance it, record tokens into
+        ``self._results[uid]``; return True while work may remain.
+      * ``_has_work()`` — anything queued or in flight (default: queue only).
+      * ``_ready()`` — worth calling ``step()`` right now (default:
+        ``_has_work()``); engines that batch by convoy return False until
+        the convoy fills or ``self._flush`` is set.
+    """
+
+    def __init__(self):
+        self._queue: Deque[Tuple[int, Request]] = collections.deque()
+        self._results: Dict[int, Result] = {}
+        self._undrained: List[int] = []
+        self._next_uid = 0
+        self._clock_origin: Optional[float] = None
+        self._flush = False
+
+    # -- clock ----------------------------------------------------------
+
+    def _now(self) -> float:
+        if self._clock_origin is None:
+            return 0.0
+        return time.perf_counter() - self._clock_origin
+
+    # -- hooks ----------------------------------------------------------
+
+    def _validate(self, req: Request) -> None:
+        pass
+
+    def _has_work(self) -> bool:
+        return bool(self._queue)
+
+    def _ready(self) -> bool:
+        return self._has_work()
+
+    def step(self) -> bool:
+        raise NotImplementedError
+
+    # -- request lifecycle ----------------------------------------------
+
+    def submit(self, prompt, gen: Optional[GenerationConfig] = None) -> int:
+        """Enqueue one request (a prompt array or a ``Request``); returns its
+        uid. Admission into compute happens inside ``step()``."""
+        if isinstance(prompt, Request):
+            if gen is not None:
+                raise ValueError("pass gen inside the Request")
+            req = prompt
+        else:
+            req = Request(prompt=prompt,
+                          gen=gen if gen is not None else GenerationConfig())
+        req = dataclasses.replace(req,
+                                  prompt=np.asarray(req.prompt, np.int32))
+        self._validate(req)
+        uid = self._next_uid
+        self._next_uid += 1
+        self._queue.append((uid, req))
+        self._undrained.append(uid)
+        self._results[uid] = Result(
+            uid=uid, tokens=[],
+            submitted_s=req.arrival if req.arrival else self._now())
+        return uid
+
+    def run(self) -> None:
+        """Drive the scheduler until queue and in-flight work are empty."""
+        self._flush = True
+        try:
+            while self._has_work():
+                self.step()
+        finally:
+            self._flush = False
+
+    def drain(self) -> List[Result]:
+        """Run to completion and return every Result not yet returned by a
+        previous ``drain``/``generate``, in submission order."""
+        self.run()
+        out = [self._results[u] for u in self._undrained]
+        self._undrained = []
+        return out
+
+    def result(self, uid: int) -> Result:
+        return self._results[uid]
+
+    # -- high-level entry points (wrappers over submit/step/drain) -------
+
+    def generate(self, prompts: Sequence[np.ndarray],
+                 gen: GenerationConfig) -> List[Result]:
+        """Offline batch entry point: submit every prompt, drain, return
+        Results in submission order."""
+        uids = [self.submit(p, gen) for p in prompts]
+        self.drain()
+        return [self._results[u] for u in uids]
+
+    def generate_timed(self, arrivals: Sequence[Tuple[float, np.ndarray,
+                                                      GenerationConfig]]
+                       ) -> List[Result]:
+        """Online entry point: ``arrivals`` is a list of
+        (arrival_time_s, prompt, gen). Requests are submitted when the wall
+        clock passes their arrival time (Poisson traffic etc.); Results carry
+        submitted_s/finished_s for latency accounting."""
+        order = sorted(range(len(arrivals)), key=lambda i: arrivals[i][0])
+        pending = collections.deque(order)
+        self._clock_origin = time.perf_counter()
+        uids: Dict[int, int] = {}
+        try:
+            while pending or self._has_work():
+                now = self._now()
+                while pending and arrivals[pending[0]][0] <= now:
+                    i = pending.popleft()
+                    t, prompt, gen = arrivals[i]
+                    uid = self.submit(Request(prompt=prompt, gen=gen,
+                                              arrival=t))
+                    self._results[uid].submitted_s = t
+                    uids[i] = uid
+                self._flush = not pending
+                if not self._ready():
+                    if pending:
+                        time.sleep(min(0.01, max(
+                            0.0, arrivals[pending[0]][0] - self._now())))
+                    continue
+                self.step()
+        finally:
+            self._flush = False
+            self._clock_origin = None
+        self._undrained = [u for u in self._undrained
+                           if u not in set(uids.values())]
+        return [self._results[uids[i]] for i in range(len(arrivals))]

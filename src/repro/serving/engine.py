@@ -1,19 +1,22 @@
 """Serving engines for the DualSparse-MoE inference system (paper §4).
 
-Two engines share the jitted model steps:
+Both engines implement the unified request API (``serving.api``:
+``submit()`` / ``step()`` / ``drain()``) and share the jitted model steps:
 
 ``ServingEngine`` — the synchronized-batch baseline: requests are grouped to
 a common (padded) prompt length, prefilled in one jitted call, then decoded
-together with ONE shared absolute position. This is the exact setting of the
-paper's efficiency evaluation (fixed 500-token prompts, 100 output tokens,
-§5.3.2) and is kept as the benchmark baseline.
+together with ONE shared absolute position. One ``step()`` serves one convoy
+batch to completion. This is the exact setting of the paper's efficiency
+evaluation (fixed 500-token prompts, 100 output tokens, §5.3.2) and is kept
+as the benchmark baseline.
 
 ``ContinuousBatchingEngine`` — slot-based continuous batching for heavy
 heterogeneous traffic: a fixed number of decode *slots* (the batch dimension
 of one jitted decode step), an admission queue, per-slot absolute positions
 and ragged KV handling (cache["pos"] is a (n_slots,) vector), per-request
 EOS/budget retirement that frees slots mid-decode for waiting requests, and
-a jitted fixed-shape prefill-insert so slot churn never retraces.
+a jitted fixed-shape prefill-insert so slot churn never retraces. One
+``step()`` is one admit+decode scheduler iteration.
 
 MoE sparsity is configured by ONE ``SparsityPolicy`` on the DistContext
 (``core.policy``: none/1t/2t/load_aware/per_layer); requests may override
@@ -30,10 +33,9 @@ and surfaced via ``engine.overflow_pairs``.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import time
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,33 +46,7 @@ from ..core.policy import NoDrop, SparsityPolicy
 from ..models import model as M
 from ..models import transformer
 from ..models.transformer import DistContext
-
-
-@dataclasses.dataclass
-class GenerationConfig:
-    max_new_tokens: int = 32
-    temperature: float = 0.0          # 0 => greedy
-    eos_token: int = -1               # -1 => never stop early
-    seed: int = 0
-    # per-request sparsity-policy override. The continuous engine requires
-    # the SAME policy family (pytree structure) as the engine's base policy
-    # — only threshold *values* may differ, so co-batched requests decode
-    # in one jitted step with per-slot thresholds and nothing retraces.
-    policy: Optional[SparsityPolicy] = None
-
-
-@dataclasses.dataclass
-class Result:
-    uid: int
-    tokens: List[int]
-    prefill_s: float = 0.0
-    decode_s: float = 0.0
-    submitted_s: float = 0.0          # arrival time (timed runs)
-    finished_s: float = 0.0           # completion time (timed runs)
-
-    @property
-    def latency_s(self) -> float:
-        return self.finished_s - self.submitted_s
+from .api import EngineBase, GenerationConfig, Request, Result  # noqa: F401
 
 
 def merge_policy_override(base: Optional[SparsityPolicy],
@@ -107,14 +83,15 @@ def exact_moe_dist(dist: Optional[DistContext]) -> DistContext:
                        policy=NoDrop(exact_capacity=True))
 
 
-class ServingEngine:
+class ServingEngine(EngineBase):
     """Synchronized-batch engine around jitted prefill/serve steps."""
 
     def __init__(self, cfg: ModelConfig, params, *, batch_size: int = 8,
                  max_prompt_len: int = 512, max_new_tokens: int = 128,
                  window: int = 0, pad_token: int = 0,
                  dist: Optional[DistContext] = None,
-                 exact_moe: bool = False):
+                 exact_moe: bool = False, cache_dtype=jnp.bfloat16):
+        super().__init__()
         self.cfg = cfg
         self.params = params
         self.batch_size = batch_size
@@ -133,7 +110,8 @@ class ServingEngine:
             d = dist if (dist is None or policy is None) else \
                 dataclasses.replace(dist, policy=policy)
             return M.make_prefill_step(cfg, cache_len=ctx, window=window,
-                                       dist=d)(params, batch)
+                                       dist=d,
+                                       cache_dtype=cache_dtype)(params, batch)
 
         def serve_step(params, token, cache, policy):
             d = dist if (dist is None or policy is None) else \
@@ -174,62 +152,100 @@ class ServingEngine:
                 (len(prompts), self.cfg.n_frontend_tokens, self.cfg.d_model))
         return batch
 
-    def generate(self, prompts: List[np.ndarray],
-                 gen: GenerationConfig) -> List[Result]:
-        """Serve a batch of prompts; returns one Result per prompt, in order.
-        Oversized batches are split into engine-sized chunks."""
-        out: List[Result] = []
-        for i in range(0, len(prompts), self.batch_size):
-            out.extend(self._generate_chunk(prompts[i:i + self.batch_size],
-                                            gen))
-        return out
+    # -- unified request API --------------------------------------------
 
-    def _generate_chunk(self, prompts, gen: GenerationConfig) -> List[Result]:
-        B = len(prompts)
-        batch = self._make_batch(prompts)
-        policy = self._policy_for(gen)
+    def _validate(self, req: Request) -> None:
+        self._policy_for(req.gen)        # raises on family mismatch
+
+    def _ready(self) -> bool:
+        """Convoy semantics: wait for a full batch while more traffic is
+        still arriving; a flush (``run``/end of trace) serves partials."""
+        if not self._queue:
+            return False
+        return self._flush or len(self._queue) >= self.batch_size
+
+    @staticmethod
+    def _policy_sig(gen: GenerationConfig):
+        if gen.policy is None:
+            return None
+        return (type(gen.policy),
+                tuple(float(l) for l in
+                      jax.tree_util.tree_flatten(gen.policy)[0]))
+
+    def step(self) -> bool:
+        """Serve ONE convoy batch to completion: pop up to ``batch_size``
+        queued requests (cut early at a per-request policy-override change —
+        the policy is one jit argument per batch), prefill them together,
+        decode with per-request EOS/budget/sampling. Returns True while more
+        requests are queued."""
+        if not self._queue:
+            return False
+        batch = [self._queue.popleft()]
+        sig = self._policy_sig(batch[0][1].gen)
+        while (len(batch) < self.batch_size and self._queue
+               and self._policy_sig(self._queue[0][1].gen) == sig):
+            batch.append(self._queue.popleft())
+        self._run_batch(batch)
+        return bool(self._queue)
+
+    def _run_batch(self, batch: List[Tuple[int, Request]]) -> None:
+        uids = [u for u, _ in batch]
+        gens = [r.gen for _, r in batch]
+        B = len(batch)
+        b = self._make_batch([r.prompt for _, r in batch])
+        policy = self._policy_for(gens[0])
         t0 = time.perf_counter()
-        logits, cache = self._prefill(self.params, batch, policy)
+        logits, cache = self._prefill(self.params, b, policy)
         logits.block_until_ready()
         t_prefill = time.perf_counter() - t0
-        results = [Result(uid=i, tokens=[]) for i in range(B)]
         last = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         done = np.zeros(B, bool)
+        max_steps = max(g.max_new_tokens for g in gens)
         t0 = time.perf_counter()
-        for step in range(gen.max_new_tokens):
+        for step in range(max_steps):
+            last_np = np.asarray(last)
             for i in range(B):
-                if not done[i]:
-                    results[i].tokens.append(int(last[i, 0]))
-                    if int(last[i, 0]) == gen.eos_token:
-                        done[i] = True
+                if done[i]:
+                    continue
+                res = self._results[uids[i]]
+                res.tokens.append(int(last_np[i, 0]))
+                if (last_np[i, 0] == gens[i].eos_token
+                        or len(res.tokens) >= gens[i].max_new_tokens):
+                    done[i] = True
             if done.all():
                 break
             logits, cache = self._serve(self.params, last, cache, policy)
-            if gen.temperature > 0:
-                key = jax.random.fold_in(jax.random.PRNGKey(gen.seed), step)
-                last = jax.random.categorical(
-                    key, logits[:, -1] / gen.temperature)[:, None].astype(jnp.int32)
-            else:
-                last = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            last = self._next_tokens(logits, gens, uids, step)
         t_decode = time.perf_counter() - t0
         if isinstance(cache, dict) and "moe_overflow" in cache:
             self.overflow_pairs += int(cache["moe_overflow"])
-        for r in results:
-            r.prefill_s = t_prefill
-            r.decode_s = t_decode
-        return results
+        now = self._now()
+        for u in uids:
+            self._results[u].prefill_s = t_prefill
+            self._results[u].decode_s = t_decode
+            self._results[u].finished_s = now
+
+    def _next_tokens(self, logits, gens, uids, step):
+        greedy = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        if all(g.temperature == 0 for g in gens):
+            return greedy
+        greedy_np = np.asarray(greedy)
+        toks = np.empty((len(gens), 1), np.int32)
+        for i, g in enumerate(gens):
+            if g.temperature > 0:
+                key = jax.random.fold_in(
+                    jax.random.fold_in(jax.random.PRNGKey(g.seed),
+                                       uids[i]), step)
+                toks[i, 0] = int(jax.random.categorical(
+                    key, logits[i, -1] / g.temperature))
+            else:
+                toks[i, 0] = greedy_np[i, 0]
+        return jnp.asarray(toks)
 
 
 # ---------------------------------------------------------------------------
 # Continuous batching
 # ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class _Pending:
-    uid: int
-    prompt: np.ndarray
-    gen: GenerationConfig
-
 
 @dataclasses.dataclass
 class _SlotState:
@@ -238,7 +254,7 @@ class _SlotState:
     n_emitted: int = 0
 
 
-class ContinuousBatchingEngine:
+class ContinuousBatchingEngine(EngineBase):
     """Slot-based continuous-batching engine.
 
     * ``n_slots`` decode slots form the fixed batch dimension of ONE jitted
@@ -266,7 +282,7 @@ class ContinuousBatchingEngine:
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 8,
                  max_prompt_len: int = 512, max_new_tokens: int = 128,
                  pad_token: int = 0, dist: Optional[DistContext] = None,
-                 exact_moe: bool = True):
+                 exact_moe: bool = True, cache_dtype=jnp.bfloat16):
         if cfg.family in ("audio", "ssm", "hybrid"):
             # ssm/hybrid: the Mamba recurrence runs over trailing pad tokens
             # during right-padded prefill and pollutes the captured decode
@@ -275,6 +291,7 @@ class ContinuousBatchingEngine:
             raise NotImplementedError(
                 f"continuous batching supports attention-based decoder-only "
                 f"families, not {cfg.family!r}")
+        super().__init__()
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -325,7 +342,8 @@ class ContinuousBatchingEngine:
                 batch["frontend"] = jnp.zeros(
                     (1, cfg.n_frontend_tokens, cfg.d_model))
             logits, small = transformer.prefill(
-                params, batch, cfg, cache_len=ctx_len, dist=d)
+                params, batch, cfg, cache_len=ctx_len, dist=d,
+                cache_dtype=cache_dtype)
             last = jax.lax.dynamic_index_in_dim(logits[0], valid_len - 1,
                                                 axis=0, keepdims=False)
             first_tok = jnp.argmax(last).astype(jnp.int32)
@@ -365,26 +383,40 @@ class ContinuousBatchingEngine:
         self._prefill_insert = jax.jit(prefill_insert, donate_argnums=(4,))
         self._decode = jax.jit(decode, donate_argnums=(2,))
         self._cache = M.init_cache(cfg, n_slots, self.context_len,
-                                   per_slot_pos=True)
+                                   per_slot_pos=True, dtype=cache_dtype)
         self._slots: List[Optional[_SlotState]] = [None] * n_slots
-        self._queue: Deque[_Pending] = collections.deque()
         self._last = np.full((n_slots, 1), pad_token, np.int32)
         self._active = np.zeros((n_slots,), bool)
-        self._results: Dict[int, Result] = {}
-        self._next_uid = 0
-        self._clock_origin: Optional[float] = None
         # scheduler stats
         self.n_admitted = 0
         self.n_retired = 0
         self.max_concurrency = 0
         self.decode_steps = 0
 
-    # -- scheduling primitives ------------------------------------------
+    # -- unified request API --------------------------------------------
 
-    def _now(self) -> float:
-        if self._clock_origin is None:
-            return 0.0
-        return time.perf_counter() - self._clock_origin
+    def _validate(self, req: Request) -> None:
+        if len(np.asarray(req.prompt)) > self.max_prompt_len:
+            raise ValueError(
+                f"prompt length {len(np.asarray(req.prompt))} exceeds engine "
+                f"max_prompt_len {self.max_prompt_len}")
+        if req.gen.max_new_tokens > self.max_new_tokens:
+            raise ValueError(
+                f"request max_new_tokens {req.gen.max_new_tokens} "
+                f"exceeds engine budget {self.max_new_tokens}")
+        if req.gen.policy is not None:
+            if self._policy_treedef is None:
+                raise ValueError(
+                    "per-request policy override requires an engine built "
+                    "with a scalar-threshold base policy (DistContext.policy)")
+            # same family required; static hints (exact capacity etc.) stay
+            # the engine's — only the override's threshold leaves are used
+            merge_policy_override(self._base_policy, req.gen.policy)
+
+    def _has_work(self) -> bool:
+        return bool(self._queue) or bool(self._active.any())
+
+    # -- scheduling primitives ------------------------------------------
 
     def _request_leaves(self, gen: GenerationConfig):
         """Validated threshold leaves for a request (base values when the
@@ -403,32 +435,6 @@ class ContinuousBatchingEngine:
         return jax.tree_util.tree_unflatten(
             self._policy_treedef,
             [jnp.asarray(row) for row in self._slot_pol])
-
-    def submit(self, prompt, gen: Optional[GenerationConfig] = None) -> int:
-        """Enqueue one request; returns its uid. Admission happens inside
-        ``step()`` when a slot is free."""
-        gen = gen if gen is not None else GenerationConfig()
-        prompt = np.asarray(prompt, np.int32)
-        if len(prompt) > self.max_prompt_len:
-            raise ValueError(f"prompt length {len(prompt)} exceeds engine "
-                             f"max_prompt_len {self.max_prompt_len}")
-        if gen.max_new_tokens > self.max_new_tokens:
-            raise ValueError(f"request max_new_tokens {gen.max_new_tokens} "
-                             f"exceeds engine budget {self.max_new_tokens}")
-        if gen.policy is not None:
-            if self._policy_treedef is None:
-                raise ValueError(
-                    "per-request policy override requires an engine built "
-                    "with a scalar-threshold base policy (DistContext.policy)")
-            # same family required; static hints (exact capacity etc.) stay
-            # the engine's — only the override's threshold leaves are used
-            merge_policy_override(self._base_policy, gen.policy)
-        uid = self._next_uid
-        self._next_uid += 1
-        self._queue.append(_Pending(uid, prompt, gen))
-        self._results[uid] = Result(uid=uid, tokens=[],
-                                    submitted_s=self._now())
-        return uid
 
     def _retire(self, slot: int):
         st = self._slots[slot]
@@ -450,7 +456,7 @@ class ContinuousBatchingEngine:
                 break
             if self._slots[slot] is not None:
                 continue
-            req = self._queue.popleft()
+            uid, req = self._queue.popleft()
             toks = np.full((1, self.max_prompt_len), self.pad_token, np.int32)
             toks[0, :len(req.prompt)] = req.prompt
             req_policy = None
@@ -465,9 +471,9 @@ class ContinuousBatchingEngine:
                 jnp.asarray(len(req.prompt), jnp.int32),
                 jnp.asarray(slot, jnp.int32), self._cache, req_policy)
             first = int(first)
-            res = self._results[req.uid]
+            res = self._results[uid]
             res.prefill_s = time.perf_counter() - t0
-            self._slots[slot] = _SlotState(uid=req.uid, gen=req.gen)
+            self._slots[slot] = _SlotState(uid=uid, gen=req.gen)
             self._active[slot] = True
             self._last[slot, 0] = first
             self._emit(slot, first)
@@ -517,51 +523,6 @@ class ContinuousBatchingEngine:
             self._last[slot, 0] = tok
             self._emit(slot, tok)
         return True
-
-    def run(self):
-        """Drive the scheduler until queue and slots are empty."""
-        while self._queue or self._active.any():
-            self.step()
-
-    # -- high-level entry points ----------------------------------------
-
-    def generate(self, prompts: Sequence[np.ndarray],
-                 gen: GenerationConfig) -> List[Result]:
-        """Offline batch entry point (mirrors ServingEngine.generate):
-        enqueue every prompt, run to completion, return Results in order."""
-        uids = [self.submit(p, gen) for p in prompts]
-        self.run()
-        return [self._results[u] for u in uids]
-
-    def generate_timed(self, arrivals: Sequence[Tuple[float, np.ndarray,
-                                                      GenerationConfig]]
-                       ) -> List[Result]:
-        """Online entry point: ``arrivals`` is a list of
-        (arrival_time_s, prompt, gen). Requests are submitted when the wall
-        clock passes their arrival time (Poisson traffic etc.); Results carry
-        submitted_s/finished_s for latency accounting."""
-        order = sorted(range(len(arrivals)), key=lambda i: arrivals[i][0])
-        pending = collections.deque(order)
-        self._clock_origin = time.perf_counter()
-        uids: Dict[int, int] = {}
-        while pending or self._queue or self._active.any():
-            now = self._now()
-            while pending and arrivals[pending[0]][0] <= now:
-                i = pending.popleft()
-                t, prompt, gen = arrivals[i]
-                uid = self.submit(prompt, gen)
-                self._results[uid].submitted_s = t
-                uids[i] = uid
-            if not self._queue and not self._active.any() and pending:
-                time.sleep(min(0.01,
-                               max(0.0, arrivals[pending[0]][0] - self._now())))
-                continue
-            self.step()
-        self._clock_origin = None
-        return [self._results[uids[i]] for i in range(len(arrivals))]
-
-    def result(self, uid: int) -> Result:
-        return self._results[uid]
 
     def reset_stats(self):
         """Zero the scheduler statistics (after a warmup run, say). Trace

@@ -86,6 +86,50 @@ def test_host_sync_pass_catches_pure_callback():
     assert any(f.severity == Severity.ERROR for f in found)
 
 
+def test_traced_leaves_pass_accepts_argument_and_flags_constant():
+    """The page-table retrace-hazard check: an int32 indirection array
+    passed as an argument is clean; the same array captured as a closure
+    constant (whose VALUE would hash into the jit cache key) is an ERROR."""
+    table = jnp.zeros((2, 5), jnp.int32)
+    spec = [[(2, 5), "int32"]]
+
+    def good(x, pt):
+        return jnp.take(x, pt.reshape(-1), axis=0)
+
+    jaxpr = jax.make_jaxpr(good)(jax.ShapeDtypeStruct((8, 4), jnp.float32),
+                                 jax.ShapeDtypeStruct((2, 5), jnp.int32))
+    assert jaxpr_passes.check_traced_leaves(jaxpr, "seeded", spec) == []
+
+    def bad(x):
+        return jnp.take(x, table.reshape(-1), axis=0)   # captured constant
+
+    jaxpr = jax.make_jaxpr(bad)(jax.ShapeDtypeStruct((8, 4), jnp.float32))
+    found = jaxpr_passes.check_traced_leaves(jaxpr, "seeded", spec)
+    assert any(f.fingerprint ==
+               "jaxpr-traced-leaves:leaf-captured-constant:seeded"
+               for f in found), found
+
+    missing = jaxpr_passes.check_traced_leaves(jaxpr, "seeded",
+                                               [[(3, 7), "int32"]])
+    assert any(f.pass_name == "jaxpr-traced-leaves"
+               and "leaf-missing" in f.fingerprint for f in missing)
+
+
+def test_paged_engine_entries_trace_clean():
+    """The paged serving steps take the page table as a traced invar (no
+    captured constants) and carry the traced_leaves meta the runner keys
+    the check on."""
+    entries = [e for e in build_entries(include_hlo=False)
+               if e.name in ("engine/chunk_insert", "engine/paged_decode",
+                             "engine/prefix_hit_insert")]
+    assert len(entries) == 3
+    for e in entries:
+        assert e.meta.get("traced_leaves")
+        art = e.trace()
+        assert jaxpr_passes.check_traced_leaves(
+            art.jaxpr, e.name, e.meta["traced_leaves"]) == []
+
+
 # ---------------------------------------------------------------------------
 # policy retrace-hazard family
 # ---------------------------------------------------------------------------
