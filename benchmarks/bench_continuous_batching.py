@@ -52,6 +52,17 @@ def lat_stats(lats):
     return float(lats.mean()), float(np.percentile(lats, 95))
 
 
+def timing_line(eng):
+    """compile-vs-steady split from the engine's step classifier — steps
+    that (re)traced a jit are compile, the rest are steady state; a tok/s
+    headline that mixes the two misstates both."""
+    t = eng.timing
+    return (f"timing: compile={t['compile_s']:.2f}s "
+            f"({t['compile_steps']} traced steps) "
+            f"steady_step={t['steady_step_s'] * 1e3:.2f}ms "
+            f"over {t['steady_steps']} steps")
+
+
 def _warm_sync(eng, cfg, batch_size, max_prompt):
     """Compile prefill/serve at the shapes the traffic will hit (a chunk's
     padded length is its longest prompt, so warm at max_prompt). Retraces on
@@ -77,7 +88,7 @@ def run_sync(cfg, params, traffic, batch_size, max_prompt, max_new):
     wall = time.perf_counter() - t0
     tokens = sum(len(r.tokens) for r in res)
     latencies = [r.latency_s for r in res]
-    return tokens / wall, latencies, wall
+    return tokens / wall, latencies, wall, eng
 
 
 def _run_timed(eng, traffic, max_prompt):
@@ -144,6 +155,7 @@ def main():
           f"max_concurrency={eng.max_concurrency} "
           f"traces(prefill={eng.prefill_traces}, decode={eng.decode_traces}) "
           f"moe_overflow={moe_overflow(eng)}")
+    print(f"  {timing_line(eng)}")
 
     tps_p, lat_p, wall_p, peng = run_paged(
         cfg, params, traffic, args.slots, max_prompt, max_new,
@@ -157,12 +169,14 @@ def main():
           f"prefix_hit_rate={peng.prefix_hit_rate:.2f} "
           f"traces(chunk={peng.chunk_traces}, decode={peng.decode_traces}) "
           f"moe_overflow={moe_overflow(peng)}")
+    print(f"  {timing_line(peng)}")
 
-    tps_s, lat_s, wall_s = run_sync(cfg, params, traffic, args.slots,
-                                    max_prompt, max_new)
+    tps_s, lat_s, wall_s, seng = run_sync(cfg, params, traffic, args.slots,
+                                          max_prompt, max_new)
     m, p95 = lat_stats(lat_s)
     print(f"synchronized (B={args.slots})  : {tps_s:6.1f} tok/s  "
           f"latency mean {m:.2f}s p95 {p95:.2f}s  wall {wall_s:.2f}s")
+    print(f"  {timing_line(seng)}")
     print(f"# continuous/synchronized throughput: {tps_c / tps_s:.2f}x, "
           f"mean-latency: {lat_stats(lat_c)[0] / lat_stats(lat_s)[0]:.2f}x")
 

@@ -90,11 +90,15 @@ def run(smoke: bool = False, out_path: str | None = None) -> dict:
         eng.generate(warm, warm_gen)       # compile outside the timed drain
         eng.reset_stats()
         tps, tokens, wall = drain_timed(eng, prompts, gen)
+        timing = eng.timing
         row = {"engine": name, "requests": n_req, "tokens": tokens,
-               "throughput_tok_s": round(tps, 2), "wall_s": round(wall, 4)}
+               "throughput_tok_s": round(tps, 2), "wall_s": round(wall, 4),
+               "compile_s": round(timing["compile_s"], 4),
+               "steady_step_s": round(timing["steady_step_s"], 6)}
         engine_rows.append(row)
         print(f"{name:11s}: {tps:8.1f} tok/s  ({tokens} tokens, "
-              f"{wall:.2f}s wall)")
+              f"{wall:.2f}s wall, compile {row['compile_s']:.2f}s, "
+              f"steady step {row['steady_step_s'] * 1e3:.2f}ms)")
 
     # -- prefix-cache hit-rate sweep -------------------------------------
     sweep_rows = []

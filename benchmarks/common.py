@@ -47,6 +47,11 @@ def moe_overflow(engine_or_cache) -> int:
     if hasattr(engine_or_cache, "overflow_pairs"):
         return int(engine_or_cache.overflow_pairs)
     if isinstance(engine_or_cache, dict):
+        # NB: dict.get bypasses ObsCache's deprecation read-through, so
+        # check the metrics seam explicitly before the legacy key
+        m = engine_or_cache.get("metrics")
+        if m is not None:
+            return int(m.overflow_pairs)
         return int(engine_or_cache.get("moe_overflow", 0))
     return 0
 

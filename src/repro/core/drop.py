@@ -99,6 +99,28 @@ def drop_rate(pairs: SubExpertPairs) -> jax.Array:
     return 1.0 - jnp.mean(pairs.keep.astype(jnp.float32))
 
 
+def sub_pair_outcome_counts(keep, p: int):
+    """Classify sub-pair outcomes from a keep mask alone (no modes needed,
+    so it works on both the dispatch path and inside the S-ETP body).
+
+    keep: (T, K*P) bool over expanded sub-expert pairs, P-major layout
+    (``expand_pairs_*``: sub 0 = MAJOR half). A pair ran FULL when any of
+    its minor halves survived; a kept pair with only the major half is
+    MAJOR-only. With P == 1 there is no minor half, so every kept pair
+    counts as FULL.
+
+    Returns (kept_full, kept_major, dropped) int32 scalars counted in
+    sub-pair units (kept_full + kept_major + dropped == T*K*P)."""
+    T, Kp = keep.shape
+    kp = keep.reshape(T, Kp // p, p)
+    full = kp[..., 1:].any(-1) if p > 1 else kp[..., 0]
+    per_pair = kp.sum(-1, dtype=jnp.int32)
+    kept_full = jnp.sum(jnp.where(full, per_pair, 0), dtype=jnp.int32)
+    kept_major = jnp.sum(jnp.where(full, 0, per_pair), dtype=jnp.int32)
+    dropped = jnp.int32(T * Kp) - kept_full - kept_major
+    return kept_full, kept_major, dropped
+
+
 def flops_saved_fraction(modes) -> jax.Array:
     """Fraction of expert FLOPs skipped: mode 0 saves 1, mode 1 saves 1/2."""
     saved = jnp.where(modes == MODE_DROP, 1.0,

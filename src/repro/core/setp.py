@@ -47,6 +47,7 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
                            **{_REP_CHECK_KW: check_vma})
 
 from . import dispatch as dispatch_mod
+from . import drop as drop_mod
 from . import gating, moe as moe_mod
 
 
@@ -83,7 +84,7 @@ def _setp_body(wg, w1, w3, w2, x_loc, *, cfg, n_dev: int, axis: str,
                token_axes: tuple, policy, thresholds=None,
                cap_factor: float, local_cap_factor: float,
                cap_multiple: int = 8, wire_dtype=jnp.bfloat16,
-               tokens_on_axis: bool = True):
+               tokens_on_axis: bool = True, collect_stats: bool = False):
     """Per-device S-ETP MoE. x_loc: (B_l, S_l, d). Experts already
     partial-transformed (E*P sub-experts when ``policy.partition_p > 1``)
     and strided-placed; this device holds w1/w3/w2 slices of L = E*P/D
@@ -134,6 +135,20 @@ def _setp_body(wg, w1, w3, w2, x_loc, *, cfg, n_dev: int, axis: str,
             loads = jax.lax.psum(loads, ax)
     keep = policy.sub_pair_keep(score, is_major, sub_idx, cfg, n_dev=n_dev,
                                 loads=loads, thresholds=thresholds)
+
+    stats = None
+    if collect_stats:
+        # routing-time metrics (pre-dispatch): kept-pair histogram over the
+        # GLOBAL sub-expert ids plus mode-attributed keep/drop counts. Like
+        # ``loads`` above, psum over the expert axis only when tokens are
+        # sharded over it — on decode the token block is replicated there
+        # and summing identical copies would multiply every count by n_dev.
+        hist = dispatch_mod.group_histogram(sub_idx, L * n_dev, mask=keep)
+        kf, km, dr = drop_mod.sub_pair_outcome_counts(keep, p_factor)
+        for ax in token_axes + ((axis,) if tokens_on_axis else ()):
+            hist, kf, km, dr = jax.lax.psum((hist, kf, km, dr), ax)
+        stats = {"expert_load": hist, "kept_full": kf, "kept_major": km,
+                 "dropped_pairs": dr}
 
     Kp = K * p_factor
     cap = _ceil_mult(cap_factor * T * Kp / n_dev, cap_multiple)
@@ -209,7 +224,11 @@ def _setp_body(wg, w1, w3, w2, x_loc, *, cfg, n_dev: int, axis: str,
     overflow = plan_dev.overflow + plan_loc.overflow
     for ax in token_axes + (axis,):
         overflow = jax.lax.psum(overflow, ax)
-    return y.reshape(Bl, Sl, d).astype(x_loc.dtype), overflow
+    y = y.reshape(Bl, Sl, d).astype(x_loc.dtype)
+    if collect_stats:
+        stats["overflow_pairs"] = overflow
+        return y, stats
+    return y, overflow
 
 
 def _spec_uses_axis(spec, axis: str) -> bool:
@@ -229,7 +248,8 @@ def setp_moe_forward(params: Dict, x, cfg, mesh: Mesh, *,
                      cap_factor: float = 1.15, local_cap_factor: float = 1.25,
                      cap_multiple: int = 8, wire_dtype=jnp.bfloat16,
                      x_spec: Optional[P] = None,
-                     return_overflow: bool = False):
+                     return_overflow: bool = False,
+                     return_stats: bool = False):
     """S-ETP MoE layer under a ``SparsityPolicy`` (default ``NoDrop``).
     params' experts must already be prepared by the SAME policy
     (``policy.prepare(...)``: partial transformation + reconstruction for
@@ -243,6 +263,12 @@ def setp_moe_forward(params: Dict, x, cfg, mesh: Mesh, *,
     of kept token/sub-expert pairs silently discarded by device-level or
     local-expert-level capacity overflow — the unsanctioned accuracy loss a
     deployment must watch, previously invisible on this path.
+
+    ``return_stats``: instead return ``(y, stats)`` where stats is the
+    ``repro.obs`` per-layer dict (kept-pair ``expert_load`` histogram over
+    global sub-expert ids plus kept_full/kept_major/dropped_pairs/
+    overflow_pairs int32 scalars), all globally psum'd and replicated.
+    Supersedes ``return_overflow`` when both are set.
     """
     if policy is None:
         from .policy import NoDrop
@@ -260,7 +286,8 @@ def setp_moe_forward(params: Dict, x, cfg, mesh: Mesh, *,
         token_axes=token_axes, policy=policy,
         cap_factor=cap_factor, local_cap_factor=local_cap_factor,
         cap_multiple=cap_multiple, wire_dtype=wire_dtype,
-        tokens_on_axis=_spec_uses_axis(x_spec, expert_axis))
+        tokens_on_axis=_spec_uses_axis(x_spec, expert_axis),
+        collect_stats=return_stats)
 
     # per-layer calibrated thresholds ride through the shard_map replicated
     has_th = "thresholds" in params
@@ -279,16 +306,23 @@ def setp_moe_forward(params: Dict, x, cfg, mesh: Mesh, *,
             th, (xx,) = None, rest
         return body(wg, w1, w3, w2, xx, thresholds=th)
 
-    y, overflow = shard_map(
+    if return_stats:
+        aux_spec = {"expert_load": P(), "kept_full": P(), "kept_major": P(),
+                    "dropped_pairs": P(), "overflow_pairs": P()}
+    else:
+        aux_spec = P()
+    y, aux = shard_map(
         fn, mesh=mesh,
         in_specs=tuple(in_specs),
-        out_specs=(x_spec, P()), check_vma=False,
+        out_specs=(x_spec, aux_spec), check_vma=False,
     )(*args)
     if "shared" in params:
         s = params["shared"]
         h = jax.nn.silu(x @ s["w1"]) * (x @ s["w3"])
         y = y + h @ s["w2"]
-    return (y, overflow) if return_overflow else y
+    if return_stats:
+        return y, aux
+    return (y, aux) if return_overflow else y
 
 
 # ---------------------------------------------------------------------------

@@ -65,6 +65,25 @@ def main():
                          "dispatch->FFN->combine kernel (no (E, C, d) HBM "
                          "buffer, no unpermute read-back)")
     ap.add_argument("--seed", type=int, default=0)
+    # observability (repro.obs)
+    ap.add_argument("--no-metrics", action="store_true",
+                    help="disable the traced on-device metrics seam "
+                         "(cache falls back to the legacy moe_overflow "
+                         "scalar)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus text exposition on this port "
+                         "while requests run (0 = ephemeral); the driver "
+                         "self-scrapes /metrics at the end and fails if "
+                         "the payload does not round-trip")
+    ap.add_argument("--metrics-log", default=None, metavar="PATH",
+                    help="append one JSON metrics snapshot line after the "
+                         "run ('-' = stdout)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the engine span trace as Chrome-trace JSON "
+                         "(load in chrome://tracing or Perfetto)")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the whole run "
+                         "into this directory (TensorBoard/XProf format)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -102,29 +121,51 @@ def main():
         jax.random.fold_in(key, i), 1, args.prompt_len)["tokens"][0])
         for i in range(args.requests)]
 
+    metrics = not args.no_metrics
     if args.engine == "continuous":
         eng = ContinuousBatchingEngine(
             cfg, params, n_slots=args.slots or args.batch_size,
             max_prompt_len=args.prompt_len, max_new_tokens=args.new_tokens,
-            dist=dist)
+            dist=dist, metrics=metrics)
     elif args.engine == "paged":
         eng = PagedEngine(
             cfg, params, n_slots=args.slots or args.batch_size,
             page_size=args.page_size, chunk_size=args.chunk_size,
             max_prompt_len=args.prompt_len, max_new_tokens=args.new_tokens,
-            dist=dist, prefix_cache=not args.no_prefix_cache)
+            dist=dist, prefix_cache=not args.no_prefix_cache,
+            metrics=metrics)
     else:
         eng = ServingEngine(cfg, params, batch_size=args.batch_size,
                             max_prompt_len=args.prompt_len,
-                            max_new_tokens=args.new_tokens, dist=dist)
+                            max_new_tokens=args.new_tokens, dist=dist,
+                            metrics=metrics)
+
+    server = None
+    if args.metrics_port is not None:
+        from repro.obs import MetricsServer
+        server = MetricsServer(eng.metrics, port=args.metrics_port)
+        server.start()
+        print(f"metrics: serving Prometheus exposition at {server.url}")
+    if args.profile_dir:
+        jax.profiler.start_trace(args.profile_dir)
     t0 = time.time()
-    results = eng.generate(prompts, GenerationConfig(
-        max_new_tokens=args.new_tokens, seed=args.seed))
+    try:
+        results = eng.generate(prompts, GenerationConfig(
+            max_new_tokens=args.new_tokens, seed=args.seed))
+    finally:
+        if args.profile_dir:
+            jax.profiler.stop_trace()
+            print(f"profiler trace written to {args.profile_dir}")
     dt = time.time() - t0
     n_tok = sum(len(r.tokens) for r in results)
     print(f"served {len(results)} requests, {n_tok} tokens "
           f"in {dt:.2f}s ({n_tok / dt:.1f} tok/s) "
           f"policy={policy_name} moe_overflow={eng.overflow_pairs}")
+    timing = eng.timing
+    print(f"  compile={timing['compile_s']:.2f}s "
+          f"({timing['compile_steps']} traced steps) "
+          f"steady_step={timing['steady_step_s'] * 1e3:.1f}ms "
+          f"over {timing['steady_steps']} steps")
     if args.engine == "continuous":
         print(f"  slots={eng.n_slots} admitted={eng.n_admitted} "
               f"decode_steps={eng.decode_steps} "
@@ -140,6 +181,33 @@ def main():
               f"decode={eng.decode_traces})")
     for r in results[:4]:
         print(f"  req{r.uid}: {r.tokens[:12]}...")
+
+    if args.metrics_log:
+        from repro.obs import snapshot_json_line
+        line = snapshot_json_line(eng.metrics(), arch=args.arch,
+                                  engine=args.engine, policy=policy_name)
+        if args.metrics_log == "-":
+            print(line)
+        else:
+            with open(args.metrics_log, "a") as f:
+                f.write(line + "\n")
+            print(f"metrics: snapshot appended to {args.metrics_log}")
+    if args.trace_out:
+        eng.tracer.write_chrome_trace(args.trace_out)
+        print(f"metrics: span trace written to {args.trace_out} "
+              f"({len(eng.tracer.events())} events)")
+    if server is not None:
+        import urllib.request
+        from repro.obs import parse_prometheus
+        with urllib.request.urlopen(server.url) as resp:
+            text = resp.read().decode()
+        snap = parse_prometheus(text)
+        n_series = (len(snap.counters) + len(snap.gauges)
+                    + len(snap.histograms))
+        server.stop()
+        if n_series == 0:
+            raise SystemExit("metrics scrape FAILED: no series parsed")
+        print(f"metrics scrape ok ({n_series} series)")
 
 
 if __name__ == "__main__":

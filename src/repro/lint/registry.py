@@ -12,6 +12,7 @@ Families (glob-friendly names):
   dispatch/<policy>/T<n>   single-device MoE forward, dispatch path
   pipeline/{buffer,fused}  capacity-buffer oracle vs fused Pallas pipeline
   setp/<policy>            shard_map S-ETP forward (needs >= 2 devices)
+  obs/dispatch_metrics/<policy>    metrics-collecting MoE layer forward
   engine/{prefill_insert,decode}   continuous-batching jitted steps
   engine/{chunk_insert,paged_decode,prefix_hit_insert}  paged-KV steps
   calib/{threshold,load_aware}     calibration math probed under x64
@@ -180,6 +181,7 @@ def _setp_entry(cfg, policy_name: str, n_dev: int) -> LintEntry:
 def _engine_entries() -> List[LintEntry]:
     from ..configs import get_config
     from ..models import model as M
+    from ..obs import metrics_spec
     from ..serving.engine import ContinuousBatchingEngine
 
     cfg = get_config("qwen3-moe-30b-a3b").reduced()
@@ -207,9 +209,48 @@ def _engine_entries() -> List[LintEntry]:
             return Artifacts(jaxpr=jax.make_jaxpr(fn)(*args))
         return trace
 
-    return [LintEntry(name=f"engine/{which}", meta={},
+    # engines default to metrics=True, so both steps trace with the
+    # MetricsState seam in the cache. The expert-load histogram leaf must
+    # be a traced ARGUMENT (counter values change every step — a captured
+    # constant would retrace per decode), and the jaxpr-hostsync pass
+    # proves the seam adds no host callbacks to the hot path.
+    spec = metrics_spec(cfg, params)
+    metrics_leaf = [[list(spec), "int32"]] if spec else []
+    return [LintEntry(name=f"engine/{which}",
+                      meta={"traced_leaves": metrics_leaf},
                       _trace=build(which))
             for which in ("prefill_insert", "decode")]
+
+
+def _obs_dispatch_entry(cfg, policy_name: str, T: int, *,
+                        want_hlo: bool) -> LintEntry:
+    """The metrics-collecting MoE layer forward (``_moe_forward`` with
+    ``collect=True``): same routing and dispatch as ``dispatch/<policy>``
+    plus the per-layer obs stats dict. The pass set proves the seam costs
+    no host syncs and no extra capacity buffers; hbm_baseline tracks its
+    (small, int32) memory footprint."""
+    from ..core.policy import make_policy
+    from ..models import transformer
+    from ..models.transformer import DistContext
+
+    kw = {"use_kernel": True} if policy_name in ("2t",) else {}
+    policy = make_policy(policy_name, cfg.dualsparse, **kw)
+    p = policy.partition_p
+    params = _abstract_moe_params(
+        cfg, p, per_layer_thresholds=(policy_name == "per_layer"))
+    B, S = 2, 32
+    x = _sds((B, S, cfg.d_model))
+    dist = DistContext(mesh=None, moe_impl="dispatch", policy=policy)
+
+    def fn(params, x):
+        y, _, stats = transformer._moe_forward(params, x, cfg, dist,
+                                               collect=True)
+        return y, stats
+
+    return LintEntry(
+        name=f"obs/dispatch_metrics/{policy_name}",
+        meta={"x64_probe": False, "hbm_baseline": want_hlo},
+        _trace=lambda: _jaxpr_and_hlo(fn, (params, x), want_hlo=want_hlo))
 
 
 def _paged_engine_entries(*, want_hlo: bool) -> List[LintEntry]:
@@ -367,6 +408,8 @@ def build_entries(*, include_hlo: bool = True,
         entries.append(_dispatch_entry(cfg, pol, 64,
                                        want_hlo=include_hlo))
     entries.append(_dispatch_entry(cfg, "2t", 256, want_hlo=False))
+    entries.append(_obs_dispatch_entry(cfg, "2t", 64,
+                                       want_hlo=include_hlo))
     if include_hlo:
         entries.extend(_pipeline_entries(cfg, 64))
     if include_hlo and len(jax.devices()) >= 2:

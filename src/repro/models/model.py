@@ -114,13 +114,16 @@ def make_train_step(cfg: ModelConfig, optimizer, *, window: int = 0,
 
 def make_prefill_step(cfg: ModelConfig, *, cache_len: int = 0, window: int = 0,
                       dist: Optional[DistContext] = None,
-                      cache_dtype=None):
+                      cache_dtype=None, metrics: bool = True):
     """batch -> (logits (B,S,vocab), populated decode cache)."""
     import jax.numpy as _jnp
     cd = cache_dtype if cache_dtype is not None else _jnp.bfloat16
+    # whisper (audio) caches have no MoE metrics seam
+    kw = {} if cfg.family == "audio" else {"metrics": metrics}
     def step(params, batch):
         return _mod(cfg).prefill(params, batch, cfg, cache_len=cache_len,
-                                 window=window, dist=dist, cache_dtype=cd)
+                                 window=window, dist=dist, cache_dtype=cd,
+                                 **kw)
     return step
 
 
@@ -142,12 +145,15 @@ def context_len_for(cfg: ModelConfig, prompt_len: int, new_tokens: int) -> int:
 
 def init_cache(cfg: ModelConfig, batch: int, context_len: int, *,
                window: int = 0, dtype=jnp.bfloat16,
-               per_slot_pos: bool = False):
+               per_slot_pos: bool = False, metrics_spec=None):
+    kw: Dict[str, Any] = {}
+    if cfg.family != "audio":
+        kw["metrics_spec"] = metrics_spec
     if per_slot_pos:
         return _mod(cfg).init_cache(cfg, batch, context_len, window=window,
-                                    dtype=dtype, per_slot_pos=True)
+                                    dtype=dtype, per_slot_pos=True, **kw)
     return _mod(cfg).init_cache(cfg, batch, context_len, window=window,
-                                dtype=dtype)
+                                dtype=dtype, **kw)
 
 
 def abstract_cache(cfg: ModelConfig, batch: int, context_len: int, *,

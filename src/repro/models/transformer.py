@@ -19,8 +19,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..core import drop as drop_mod
+from ..core import gating
 from ..core import moe as moe_mod
 from ..core import setp as setp_mod
+from ..obs import MetricsState, ObsCache
 from . import attention as attn
 from . import layers as L
 from . import mamba2 as mm
@@ -148,19 +151,30 @@ def _policy_of(dist: Optional[DistContext]):
     return NoDrop()
 
 
-def _moe_forward(p, x, cfg, dist: Optional[DistContext], aux: bool = False):
+def _moe_forward(p, x, cfg, dist: Optional[DistContext], aux: bool = False,
+                 collect: bool = False):
     """MoE layer forward under ``dist.policy`` (default ``NoDrop``).
 
     Returns ``(y, aux_loss, overflow)``: aux_loss is None unless ``aux``
     (training); overflow is the scalar count of token-expert pairs dropped
     by dispatch-capacity overflow (on the setp/shard_map path this is the
-    psum'd global count across device-level and local-expert seating)."""
+    psum'd global count across device-level and local-expert seating).
+
+    ``collect``: the third return is instead the per-layer ``repro.obs``
+    stats dict (kept-pair expert_load histogram over sub-expert ids plus
+    kept_full/kept_major/dropped_pairs/overflow_pairs) — same routing,
+    bit-identical ``y``."""
     B, S, d = x.shape
     aux_val = None
     if aux:
         aux_val = moe_mod.aux_loss_for(p, x.reshape(-1, d), cfg)
     policy = _policy_of(dist)
     if dist is not None and dist.moe_impl == "setp":
+        if collect:
+            y, stats = setp_mod.setp_moe_forward(p, x, cfg, dist.mesh,
+                                                 policy=policy,
+                                                 return_stats=True)
+            return y, aux_val, stats
         y, overflow = setp_mod.setp_moe_forward(p, x, cfg, dist.mesh,
                                                 policy=policy,
                                                 return_overflow=True)
@@ -178,15 +192,27 @@ def _moe_forward(p, x, cfg, dist: Optional[DistContext], aux: bool = False):
         use_kernel=policy.use_kernel, return_overflow=True,
         mode_grouped=policy.kernel_mode_grouping,
         fused_pipeline=getattr(policy, "fused_pipeline", False))
+    if collect:
+        n_sub = p["w1"].shape[0]
+        p_factor = pairs.idx.shape[1] // pairs.modes.shape[1]
+        kf, km, dr = drop_mod.sub_pair_outcome_counts(pairs.keep, p_factor)
+        stats = {"expert_load": gating.expert_histogram(pairs.idx, n_sub,
+                                                        keep=pairs.keep),
+                 "kept_full": kf, "kept_major": km, "dropped_pairs": dr,
+                 "overflow_pairs": overflow}
+        return y.reshape(B, S, d), aux_val, stats
     return y.reshape(B, S, d), aux_val, overflow
 
 
 def block_forward(bp, x, positions, cfg, *, window: int = 0,
                   dist: Optional[DistContext] = None, capture_cap: int = 0,
-                  cache_dtype=jnp.bfloat16, with_aux: bool = False):
+                  cache_dtype=jnp.bfloat16, with_aux: bool = False,
+                  collect_stats: bool = False):
     """Full-sequence block forward (train / prefill). With capture_cap the
     return is (x, cache_layer, moe_overflow) for the prefill->decode
-    handoff; with_aux returns (x, load-balance aux loss) for MoE training."""
+    handoff (with ``collect_stats`` the third slot is the per-layer obs
+    stats dict instead); with_aux returns (x, load-balance aux loss) for
+    MoE training."""
     no_overflow = jnp.zeros((), jnp.int32)
     if cfg.family == "ssm" or "mamba" in bp:
         h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
@@ -213,7 +239,8 @@ def block_forward(bp, x, positions, cfg, *, window: int = 0,
             y, aux, _ = _moe_forward(bp["moe"], h, cfg, dist, aux=True)
             x = x + y
             return x, aux
-        y, _, overflow = _moe_forward(bp["moe"], h, cfg, dist)
+        y, _, overflow = _moe_forward(bp["moe"], h, cfg, dist,
+                                      collect=collect_stats)
         x = x + y
     else:
         x = x + L.apply_mlp(bp["mlp"], h, cfg.mlp_kind)
@@ -224,10 +251,13 @@ def block_forward(bp, x, positions, cfg, *, window: int = 0,
 
 def block_decode(bp, x, cache_layer, pos, cfg, *, window: int = 0,
                  dist: Optional[DistContext] = None, layout=None,
-                 page_table=None, write_mask=None, read_len=None):
+                 page_table=None, write_mask=None, read_len=None,
+                 collect_stats: bool = False):
     """One-token decode. cache_layer is this layer's cache dict slice.
-    Returns (x, cache_layer, moe_overflow). ``layout``/``page_table``/
-    ``write_mask`` select the KV storage (see gqa_decode_attention)."""
+    Returns (x, cache_layer, moe_overflow) — or the per-layer obs stats
+    dict in the third slot under ``collect_stats``. ``layout``/
+    ``page_table``/``write_mask`` select the KV storage (see
+    gqa_decode_attention)."""
     no_overflow = jnp.zeros((), jnp.int32)
     if cfg.family == "ssm" or "mamba" in bp:
         h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
@@ -247,7 +277,8 @@ def block_decode(bp, x, cache_layer, pos, cfg, *, window: int = 0,
     h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
     overflow = no_overflow
     if "moe" in bp:
-        y, _, overflow = _moe_forward(bp["moe"], h, cfg, dist)
+        y, _, overflow = _moe_forward(bp["moe"], h, cfg, dist,
+                                      collect=collect_stats)
         x = x + y
     else:
         x = x + L.apply_mlp(bp["mlp"], h, cfg.mlp_kind)
@@ -294,19 +325,26 @@ def _positions_for(cfg, B, S, offset=0):
 
 def stack_forward(params, x, positions, cfg, *, window: int = 0,
                   dist: Optional[DistContext] = None, capture_cap: int = 0,
-                  cache_dtype=jnp.bfloat16, with_aux: bool = False):
+                  cache_dtype=jnp.bfloat16, with_aux: bool = False,
+                  metrics: bool = True):
     """x: (B,S,d) -> (B,S,d) through all blocks. With capture_cap also
     returns the layer-stacked decode cache (prefill); with_aux returns
-    (x, summed MoE load-balance aux loss)."""
+    (x, summed MoE load-balance aux loss).
+
+    ``metrics`` (MoE + capture only): the captured cache carries a
+    ``"metrics"`` MetricsState (per-layer expert-load histograms + sub-pair
+    outcome counters) instead of the legacy ``"moe_overflow"`` scalar;
+    decode steps accumulate into it on device."""
     if cfg.family == "hybrid":
         out = _hybrid_forward(params, x, positions, cfg, window=window,
                               dist=dist, capture_cap=capture_cap,
                               cache_dtype=cache_dtype)
         return (out, jnp.zeros(())) if with_aux else out
 
+    collect = bool(metrics and capture_cap and cfg.is_moe)
     fwd = functools.partial(block_forward, cfg=cfg, window=window, dist=dist,
                             capture_cap=capture_cap, cache_dtype=cache_dtype,
-                            with_aux=with_aux)
+                            with_aux=with_aux, collect_stats=collect)
     if dist is not None and dist.remat and not capture_cap:
         policy = None
         if dist.remat_policy == "dots":
@@ -328,7 +366,13 @@ def stack_forward(params, x, positions, cfg, *, window: int = 0,
     x, caches = jax.lax.scan(body, x, params["blocks"])
     if capture_cap:
         layers, ofs = caches
-        return x, {"layers": layers, "moe_overflow": jnp.sum(ofs)}
+        cache = ObsCache({"layers": layers})
+        if collect:
+            # scan stacked the per-layer stats dicts to (n_layers, ...)
+            cache["metrics"] = MetricsState.from_stacked(ofs)
+        else:
+            cache["moe_overflow"] = jnp.sum(ofs)
+        return x, cache
     if with_aux:
         return x, jnp.sum(caches)
     return x
@@ -379,12 +423,12 @@ def _hybrid_forward(params, x, positions, cfg, *, window: int = 0,
         if capture_cap:
             mamba_caches.append(segc)
     if capture_cap:
-        cache = {
+        cache = ObsCache({
             "mamba": jax.tree.map(lambda *xs: jnp.concatenate(xs, 0),
                                   *mamba_caches),
             "attn": jax.tree.map(lambda *xs: jnp.stack(xs), *attn_caches),
             "moe_overflow": jnp.zeros((), jnp.int32),
-        }
+        })
         return x, cache
     return x
 
@@ -397,18 +441,26 @@ def stack_decode(params, x, cache, pos, cfg, *, window: int = 0,
         return _hybrid_decode(params, x, cache, pos, cfg, window=window,
                               dist=dist)
 
+    # static gate: whether stats flow is decided by the cache's pytree
+    # STRUCTURE (the "metrics" key), never by leaf values — so metric
+    # value churn can't retrace
+    collect = "metrics" in cache
+
     def body(h, xs):
         bp, cl = xs
         h, cl, of = block_decode(bp, h, cl, pos, cfg, window=window,
                                  dist=dist, layout=layout,
                                  page_table=page_table,
-                                 write_mask=write_mask, read_len=read_len)
+                                 write_mask=write_mask, read_len=read_len,
+                                 collect_stats=collect)
         return h, (cl, of)
 
     x, (new_layers, ofs) = jax.lax.scan(
         body, x, (params["blocks"], cache["layers"]))
-    new = {"layers": new_layers}
-    if "moe_overflow" in cache:   # running total across decode steps
+    new = ObsCache({"layers": new_layers})
+    if collect:                   # device-side accumulation, no host sync
+        new["metrics"] = cache["metrics"].accumulate(ofs)
+    elif "moe_overflow" in cache:  # legacy running total across steps
         new["moe_overflow"] = cache["moe_overflow"] + jnp.sum(ofs)
     return x, new
 
@@ -442,10 +494,10 @@ def _hybrid_decode(params, x, cache, pos, cfg, *, window: int = 0,
         seg_c = jax.tree.map(lambda a: a[lo:hi], mamba_cache)
         x, seg_c = jax.lax.scan(mamba_body, x, (seg_p, seg_c))
         new_mamba.append(seg_c)
-    new_cache = {
+    new_cache = ObsCache({
         "mamba": jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_mamba),
         "attn": {"k": jnp.stack(new_attn["k"]), "v": jnp.stack(new_attn["v"])},
-    }
+    })
     if "moe_overflow" in cache:
         new_cache["moe_overflow"] = cache["moe_overflow"]
     return x, new_cache
@@ -496,11 +548,14 @@ def forward(params, batch, cfg, *, window: int = 0,
 
 
 def prefill(params, batch, cfg, *, cache_len: int = 0, window: int = 0,
-            dist: Optional[DistContext] = None, cache_dtype=jnp.bfloat16):
+            dist: Optional[DistContext] = None, cache_dtype=jnp.bfloat16,
+            metrics: bool = True):
     """Prefill: full forward AND populated decode cache.
 
     Returns (logits (B,S,vocab), cache) with cache["pos"] set past the
-    prompt (including any frontend prefix)."""
+    prompt (including any frontend prefix). ``metrics``: MoE caches carry
+    a ``"metrics"`` MetricsState (see ``repro.obs``) instead of the legacy
+    ``"moe_overflow"`` scalar."""
     x, positions, n_prefix = embed_inputs(params, batch, cfg)
     S_total = x.shape[1]
     cap = max(cache_len, S_total) if not window else \
@@ -508,7 +563,7 @@ def prefill(params, batch, cfg, *, cache_len: int = 0, window: int = 0,
     x = _maybe_constrain(x, dist, _residual_spec(dist, S_total, cfg.family))
     x, cache = stack_forward(params, x, positions, cfg, window=window,
                              dist=dist, capture_cap=cap,
-                             cache_dtype=cache_dtype)
+                             cache_dtype=cache_dtype, metrics=metrics)
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     if n_prefix:
         x = x[:, n_prefix:]
@@ -547,9 +602,11 @@ def decode_step(params, token, cache, cfg, *, window: int = 0,
 
 def chunk_block(bp, x, cache_layer, slot, start, valid_len, cfg, *,
                 layout, page_table=None, read_len=None,
-                dist: Optional[DistContext] = None):
+                dist: Optional[DistContext] = None,
+                collect_stats: bool = False):
     """One block over a (1,C,d) prompt chunk of a single slot, appending its
-    K/V into the decode cache. Returns (x, cache_layer, moe_overflow)."""
+    K/V into the decode cache. Returns (x, cache_layer, moe_overflow) —
+    obs stats dict in the third slot under ``collect_stats``."""
     h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
     y, cache_layer = attn.gqa_chunk_attention(
         bp["attn"], h, cache_layer, slot, start, valid_len, cfg,
@@ -558,7 +615,8 @@ def chunk_block(bp, x, cache_layer, slot, start, valid_len, cfg, *,
     h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
     overflow = jnp.zeros((), jnp.int32)
     if "moe" in bp:
-        y, _, overflow = _moe_forward(bp["moe"], h, cfg, dist)
+        y, _, overflow = _moe_forward(bp["moe"], h, cfg, dist,
+                                      collect=collect_stats)
         x = x + y
     else:
         x = x + L.apply_mlp(bp["mlp"], h, cfg.mlp_kind)
@@ -587,20 +645,25 @@ def chunk_step(params, tokens, slot, start, valid_len, cache, cfg, *,
     valid_len = jnp.asarray(valid_len, jnp.int32)
     x = L.embed(params["embed"], tokens)
 
+    collect = "metrics" in cache  # static structural gate, as stack_decode
+
     def body(h, xs):
         bp, cl = xs
         h, cl, of = chunk_block(bp, h, cl, slot, start, valid_len, cfg,
                                 layout=layout, page_table=page_table,
-                                read_len=read_len, dist=dist)
+                                read_len=read_len, dist=dist,
+                                collect_stats=collect)
         return h, (cl, of)
 
     x, (new_layers, ofs) = jax.lax.scan(
         body, x, (params["blocks"], cache["layers"]))
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = L.unembed(params["embed"], x)
-    new_cache = {"layers": new_layers,
-                 "pos": cache["pos"].at[slot].set(start + valid_len)}
-    if "moe_overflow" in cache:
+    new_cache = ObsCache({"layers": new_layers,
+                          "pos": cache["pos"].at[slot].set(start + valid_len)})
+    if collect:
+        new_cache["metrics"] = cache["metrics"].accumulate(ofs)
+    elif "moe_overflow" in cache:
         new_cache["moe_overflow"] = cache["moe_overflow"] + jnp.sum(ofs)
     return logits, new_cache
 
@@ -610,10 +673,15 @@ def chunk_step(params, tokens, slot, start, valid_len, cache, cfg, *,
 # ---------------------------------------------------------------------------
 
 def init_cache(cfg, batch: int, context_len: int, *, window: int = 0,
-               dtype=jnp.bfloat16, per_slot_pos: bool = False):
+               dtype=jnp.bfloat16, per_slot_pos: bool = False,
+               metrics_spec=None):
     """Layer-stacked decode cache. ``context_len`` is the KV capacity
     (== window when windowed). ``per_slot_pos`` makes cache['pos'] a (B,)
-    vector so each batch slot decodes at its own ragged position."""
+    vector so each batch slot decodes at its own ragged position.
+    ``metrics_spec``: an (n_layers, n_sub_experts) pair (see
+    ``repro.obs.metrics_spec``) — the cache then carries a zeroed
+    ``"metrics"`` MetricsState instead of the legacy ``"moe_overflow"``
+    scalar, and decode steps accumulate obs stats into it."""
     cap = min(window, context_len) if window else context_len
     hd = cfg.resolved_head_dim
 
@@ -648,15 +716,19 @@ def init_cache(cfg, batch: int, context_len: int, *, window: int = 0,
         cache = {"layers": jax.tree.map(
             lambda *xs: jnp.stack(xs),
             *[one_attn() for _ in range(cfg.n_layers)])}
+    cache = ObsCache(cache)
     cache["pos"] = jnp.zeros((batch,) if per_slot_pos else (), jnp.int32)
-    # running count of token-expert pairs dropped by dispatch-capacity
-    # overflow (accumulated by decode steps; serving engines surface it)
-    cache["moe_overflow"] = jnp.zeros((), jnp.int32)
+    if metrics_spec is not None:
+        cache["metrics"] = MetricsState.zeros(*metrics_spec)
+    else:
+        # legacy: running count of token-expert pairs dropped by
+        # dispatch-capacity overflow (accumulated by decode steps)
+        cache["moe_overflow"] = jnp.zeros((), jnp.int32)
     return cache
 
 
 def init_paged_cache(cfg, n_pages: int, page_size: int, n_slots: int, *,
-                     dtype=jnp.bfloat16):
+                     dtype=jnp.bfloat16, metrics_spec=None):
     """Layer-stacked PAGED decode cache: one (n_pages, page_size, Hkv, D)
     pool per layer, shared by all slots through a per-slot page table the
     engine owns (the same logical->physical mapping applies to every
@@ -666,10 +738,13 @@ def init_paged_cache(cfg, n_pages: int, page_size: int, n_slots: int, *,
         "paged KV requires gqa attention"
     layout = attn.PagedLayout(page_size)
     hd = cfg.resolved_head_dim
-    cache = {"layers": jax.tree.map(
+    cache = ObsCache({"layers": jax.tree.map(
         lambda *xs: jnp.stack(xs),
         *[layout.init(n_pages, cfg.n_kv_heads, hd, dtype)
-          for _ in range(cfg.n_layers)])}
+          for _ in range(cfg.n_layers)])})
     cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
-    cache["moe_overflow"] = jnp.zeros((), jnp.int32)
+    if metrics_spec is not None:
+        cache["metrics"] = MetricsState.zeros(*metrics_spec)
+    else:
+        cache["moe_overflow"] = jnp.zeros((), jnp.int32)
     return cache

@@ -1,0 +1,156 @@
+"""Traced on-device metrics (the sensor half of ``repro.obs``).
+
+``MetricsState`` is a registered pytree of int32 arrays that rides INSIDE
+the jitted decode cache, exactly where the old ``cache["moe_overflow"]``
+scalar used to sit — but as one uniform seam instead of three divergent
+per-engine accumulation paths:
+
+* ``expert_load`` — (n_layers, n_sub) histogram of KEPT token/sub-expert
+  pairs per sub-expert per layer (routing-time counts, pre-capacity).
+* ``kept_full`` / ``kept_major`` — kept sub-pair counts attributed to the
+  2T-Drop mode of their original pair (FULL = any minor half kept;
+  MAJOR = major half of a major-only pair). With P == 1 every kept pair
+  counts as FULL.
+* ``dropped_pairs`` — sub-pairs dropped by the sparsity policy
+  (``total - kept``; the paper's drop rate is dropped / total).
+* ``overflow_pairs`` — KEPT pairs silently discarded by dispatch-capacity
+  overflow (unsanctioned accuracy loss; 0 under ``exact_moe``).
+
+Every field is a plain array leaf: values change every step, shapes never
+do, so jit sees traced leaves (guarded by the ``jaxpr-traced-leaves`` lint
+pass) and nothing retraces. No callbacks, no host syncs — engines drain
+the state into host snapshots only at step boundaries via
+``engine.metrics()``.
+
+``ObsCache`` is the decode-cache dict type: a registered dict subclass
+whose legacy ``cache["moe_overflow"]`` key is kept as a deprecated
+read-through to ``metrics.overflow_pairs``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# the stats-dict keys produced per MoE layer by the forward/decode paths;
+# field order of MetricsState and stacking in from_stacked rely on these
+STAT_KEYS = ("expert_load", "kept_full", "kept_major", "dropped_pairs",
+             "overflow_pairs")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class MetricsState:
+    """Device-resident MoE metrics accumulator (all int32 leaves)."""
+    expert_load: jax.Array       # (n_layers, n_sub)
+    kept_full: jax.Array         # ()
+    kept_major: jax.Array        # ()
+    dropped_pairs: jax.Array     # ()
+    overflow_pairs: jax.Array    # ()
+
+    def tree_flatten(self):
+        return ((self.expert_load, self.kept_full, self.kept_major,
+                 self.dropped_pairs, self.overflow_pairs), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        del aux
+        return cls(*leaves)
+
+    # -- constructors ----------------------------------------------------
+
+    @classmethod
+    def zeros(cls, n_layers: int, n_sub: int) -> "MetricsState":
+        # distinct buffers per field: engines donate the cache these live
+        # in, and XLA rejects the same buffer donated twice
+        z = jnp.zeros((4,), jnp.int32)
+        return cls(expert_load=jnp.zeros((n_layers, n_sub), jnp.int32),
+                   kept_full=z[0], kept_major=z[1], dropped_pairs=z[2],
+                   overflow_pairs=z[3])
+
+    @classmethod
+    def from_stacked(cls, stats: Dict[str, jax.Array]) -> "MetricsState":
+        """From per-layer stats stacked by ``jax.lax.scan``: expert_load is
+        already (n_layers, n_sub); scalar counters come in as (n_layers,)
+        and sum over layers."""
+        return cls(
+            expert_load=stats["expert_load"].astype(jnp.int32),
+            kept_full=jnp.sum(stats["kept_full"]).astype(jnp.int32),
+            kept_major=jnp.sum(stats["kept_major"]).astype(jnp.int32),
+            dropped_pairs=jnp.sum(stats["dropped_pairs"]).astype(jnp.int32),
+            overflow_pairs=jnp.sum(stats["overflow_pairs"]).astype(jnp.int32))
+
+    # -- accumulation (in-jit) -------------------------------------------
+
+    def __add__(self, other: "MetricsState") -> "MetricsState":
+        return MetricsState(
+            expert_load=self.expert_load + other.expert_load,
+            kept_full=self.kept_full + other.kept_full,
+            kept_major=self.kept_major + other.kept_major,
+            dropped_pairs=self.dropped_pairs + other.dropped_pairs,
+            overflow_pairs=self.overflow_pairs + other.overflow_pairs)
+
+    def accumulate(self, stats: Dict[str, jax.Array]) -> "MetricsState":
+        """Fold one step's scan-stacked per-layer stats into the total."""
+        return self + MetricsState.from_stacked(stats)
+
+    # -- host snapshot (the ONLY sync point) -----------------------------
+
+    def snapshot(self) -> Dict[str, np.ndarray]:
+        """Pull values to host (one transfer per leaf; call at step
+        boundaries, never inside the serving loop's hot path)."""
+        return {k: np.asarray(getattr(self, k)) for k in STAT_KEYS}
+
+    @property
+    def total_pairs(self):
+        return self.kept_full + self.kept_major + self.dropped_pairs
+
+
+def metrics_spec(cfg, params) -> Optional[Tuple[int, int]]:
+    """(n_layers, n_sub_experts) for a layer-stacked MoE param tree
+    (``params["blocks"]["moe"]["w1"]`` shaped (n_layers, n_sub, d, f) —
+    works on prepared/partitioned params AND abstract ShapeDtypeStructs),
+    or None when the model has no scannable MoE stack."""
+    if not getattr(cfg, "is_moe", False):
+        return None
+    try:
+        w1 = params["blocks"]["moe"]["w1"]
+    except (KeyError, TypeError, IndexError):
+        return None
+    return int(w1.shape[0]), int(w1.shape[1])
+
+
+class ObsCache(dict):
+    """Decode-cache dict. Identical to dict except that the retired
+    ``"moe_overflow"`` key reads through to ``metrics.overflow_pairs``
+    with a DeprecationWarning (``cache["metrics"]`` is the seam now)."""
+
+    def __getitem__(self, key):
+        if key == "moe_overflow" and not dict.__contains__(self, key) \
+                and dict.__contains__(self, "metrics"):
+            warnings.warn(
+                'cache["moe_overflow"] is deprecated; read '
+                'cache["metrics"].overflow_pairs (obs.MetricsState) instead',
+                DeprecationWarning, stacklevel=2)
+            return dict.__getitem__(self, "metrics").overflow_pairs
+        return dict.__getitem__(self, key)
+
+
+def _obs_cache_flatten(c: ObsCache):
+    keys = tuple(sorted(c))
+    return tuple(dict.__getitem__(c, k) for k in keys), keys
+
+
+def _obs_cache_unflatten(keys, values) -> ObsCache:
+    out = ObsCache()
+    for k, v in zip(keys, values):
+        dict.__setitem__(out, k, v)
+    return out
+
+
+jax.tree_util.register_pytree_node(ObsCache, _obs_cache_flatten,
+                                   _obs_cache_unflatten)

@@ -32,6 +32,7 @@ from typing import (Deque, Dict, List, Optional, Protocol, Sequence, Tuple,
 import numpy as np
 
 from ..core.policy import SparsityPolicy
+from ..obs import MetricsSnapshot, SpanTracer
 
 
 @dataclasses.dataclass
@@ -62,12 +63,29 @@ class Result:
     tokens: List[int]
     prefill_s: float = 0.0
     decode_s: float = 0.0
-    submitted_s: float = 0.0          # arrival time (timed runs)
-    finished_s: float = 0.0           # completion time (timed runs)
+    submitted_s: float = 0.0          # arrival time (engine clock)
+    finished_s: float = 0.0           # completion time (engine clock)
+    first_token_s: Optional[float] = None   # first token emission time
 
     @property
     def latency_s(self) -> float:
         return self.finished_s - self.submitted_s
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Time to first token (None until one is emitted)."""
+        if self.first_token_s is None:
+            return None
+        return self.first_token_s - self.submitted_s
+
+    @property
+    def tpot_s(self) -> Optional[float]:
+        """Mean time per output token after the first (None with < 2)."""
+        if self.first_token_s is None or len(self.tokens) < 2 \
+                or not self.finished_s:
+            return None
+        return ((self.finished_s - self.first_token_s)
+                / (len(self.tokens) - 1))
 
 
 @runtime_checkable
@@ -96,22 +114,36 @@ class EngineBase:
     Subclass contract:
       * ``_validate(req)`` — raise on inadmissible requests (called by
         ``submit`` before the uid is allocated).
-      * ``step()`` — pop work from ``self._queue`` (deque of
+      * ``_step()`` — pop work from ``self._queue`` (deque of
         ``(uid, Request)``), advance it, record tokens into
-        ``self._results[uid]``; return True while work may remain.
+        ``self._results[uid]`` (via ``_record_token``); return True while
+        work may remain. The public ``step()`` wraps it with span tracing
+        and compile-vs-steady wall-clock accounting.
       * ``_has_work()`` — anything queued or in flight (default: queue only).
       * ``_ready()`` — worth calling ``step()`` right now (default:
         ``_has_work()``); engines that batch by convoy return False until
         the convoy fills or ``self._flush`` is set.
+      * ``_trace_count()`` — total jit (re)traces so far (default 0):
+        lets ``step()`` attribute a step's wall time to compilation rather
+        than steady-state decode.
+      * ``_device_metrics()`` — the engine's device-resident MetricsState
+        (or None); ``_metrics_hook(snap)`` — add engine-specific series.
     """
 
-    def __init__(self):
+    def __init__(self, *, metrics: bool = True):
         self._queue: Deque[Tuple[int, Request]] = collections.deque()
         self._results: Dict[int, Result] = {}
         self._undrained: List[int] = []
         self._next_uid = 0
         self._clock_origin: Optional[float] = None
         self._flush = False
+        self.metrics_enabled = metrics
+        self.tracer = SpanTracer(enabled=metrics)
+        # compile vs steady step timing (see generate_timed / step())
+        self._compile_s = 0.0
+        self._steady_s = 0.0
+        self._compile_steps = 0
+        self._steady_steps = 0
 
     # -- clock ----------------------------------------------------------
 
@@ -131,8 +163,100 @@ class EngineBase:
     def _ready(self) -> bool:
         return self._has_work()
 
-    def step(self) -> bool:
+    def _step(self) -> bool:
         raise NotImplementedError
+
+    def _trace_count(self) -> int:
+        return 0
+
+    def _device_metrics(self):
+        return None
+
+    def _metrics_hook(self, snap: MetricsSnapshot) -> None:
+        pass
+
+    def _record_token(self, uid: int, token: int) -> None:
+        """Append one generated token, stamping first-token time (TTFT)."""
+        res = self._results[uid]
+        if not res.tokens:
+            res.first_token_s = self._now()
+        res.tokens.append(token)
+
+    def step(self) -> bool:
+        """Advance the scheduler one iteration (traced + timed). A step
+        during which any jitted callable (re)traced counts as compile time;
+        all others accumulate into the steady-state step time — the split
+        ``generate_timed`` previously conflated."""
+        n0 = self._trace_count()
+        t0 = time.perf_counter()
+        with self.tracer.span("step", engine=type(self).__name__):
+            out = self._step()
+        dt = time.perf_counter() - t0
+        if self._trace_count() > n0:
+            self._compile_s += dt
+            self._compile_steps += 1
+        else:
+            self._steady_s += dt
+            self._steady_steps += 1
+        return out
+
+    @property
+    def timing(self) -> Dict[str, float]:
+        """Wall-clock accounting over every ``step()`` so far:
+        ``compile_s`` (steps that (re)traced a jitted callable, i.e. paid
+        compilation), ``steady_s`` total / ``steady_step_s`` mean for the
+        remaining steady-state steps."""
+        return {
+            "compile_s": self._compile_s,
+            "compile_steps": float(self._compile_steps),
+            "steady_s": self._steady_s,
+            "steady_steps": float(self._steady_steps),
+            "steady_step_s": (self._steady_s / self._steady_steps
+                              if self._steady_steps else 0.0),
+        }
+
+    # -- metrics snapshot (host sync happens HERE, at a step boundary) ---
+
+    def metrics(self) -> MetricsSnapshot:
+        """One point-in-time snapshot of engine metrics: device-resident
+        MoE counters (drained here — the only host transfer), queue/timing
+        gauges, and per-request TTFT/TPOT/latency histograms."""
+        snap = MetricsSnapshot()
+        dm = self._device_metrics()
+        if dm is not None:
+            s = dm.snapshot()
+            for outcome in ("kept_full", "kept_major"):
+                snap.counter("repro_moe_subpairs_total", int(s[outcome]),
+                             outcome=outcome)
+            snap.counter("repro_moe_subpairs_total",
+                         int(s["dropped_pairs"]), outcome="dropped")
+            snap.counter("repro_moe_subpairs_total",
+                         int(s["overflow_pairs"]), outcome="overflow")
+            el = s["expert_load"]
+            for layer in range(el.shape[0]):
+                for expert in range(el.shape[1]):
+                    snap.counter("repro_moe_expert_load_total",
+                                 int(el[layer, expert]),
+                                 layer=layer, expert=expert)
+        snap.gauge("repro_queue_depth", len(self._queue))
+        t = self.timing
+        snap.gauge("repro_engine_compile_s", t["compile_s"])
+        snap.gauge("repro_engine_steady_step_s", t["steady_step_s"])
+        finished = [r for r in self._results.values() if r.finished_s]
+        snap.counter("repro_requests_total", len(self._results),
+                     state="submitted")
+        snap.counter("repro_requests_total", len(finished), state="finished")
+        h_lat = snap.histogram("repro_request_latency_seconds")
+        h_ttft = snap.histogram("repro_request_ttft_seconds")
+        h_tpot = snap.histogram("repro_request_tpot_seconds")
+        for r in finished:
+            h_lat.observe(r.latency_s)
+            if r.ttft_s is not None:
+                h_ttft.observe(r.ttft_s)
+            if r.tpot_s is not None:
+                h_tpot.observe(r.tpot_s)
+        self._metrics_hook(snap)
+        return snap
 
     # -- request lifecycle ----------------------------------------------
 
@@ -149,6 +273,10 @@ class EngineBase:
         req = dataclasses.replace(req,
                                   prompt=np.asarray(req.prompt, np.int32))
         self._validate(req)
+        if self._clock_origin is None:
+            # start the engine clock at the first submission so TTFT /
+            # latency are meaningful outside generate_timed too
+            self._clock_origin = time.perf_counter()
         uid = self._next_uid
         self._next_uid += 1
         self._queue.append((uid, req))
@@ -156,6 +284,8 @@ class EngineBase:
         self._results[uid] = Result(
             uid=uid, tokens=[],
             submitted_s=req.arrival if req.arrival else self._now())
+        self.tracer.instant("submit", uid=uid,
+                            prompt_len=int(len(req.prompt)))
         return uid
 
     def run(self) -> None:

@@ -46,6 +46,7 @@ from ..core.policy import NoDrop, SparsityPolicy
 from ..models import model as M
 from ..models import transformer
 from ..models.transformer import DistContext
+from ..obs import MetricsSnapshot, metrics_spec
 from .api import EngineBase, GenerationConfig, Request, Result  # noqa: F401
 
 
@@ -90,8 +91,9 @@ class ServingEngine(EngineBase):
                  max_prompt_len: int = 512, max_new_tokens: int = 128,
                  window: int = 0, pad_token: int = 0,
                  dist: Optional[DistContext] = None,
-                 exact_moe: bool = False, cache_dtype=jnp.bfloat16):
-        super().__init__()
+                 exact_moe: bool = False, cache_dtype=jnp.bfloat16,
+                 metrics: bool = True):
+        super().__init__(metrics=metrics)
         self.cfg = cfg
         self.params = params
         self.batch_size = batch_size
@@ -100,20 +102,28 @@ class ServingEngine(EngineBase):
         if exact_moe and cfg.is_moe:
             dist = exact_moe_dist(dist)
         self.dist = dist
-        self.overflow_pairs = 0          # MoE capacity-overflow drops served
+        # device-resident obs MetricsState summed over served batches (one
+        # lazy add per batch, drained only by engine.metrics()); None until
+        # the first metrics-enabled batch finishes
+        self._dev_metrics = None
         ctx = M.context_len_for(cfg, max_prompt_len, max_new_tokens)
         self.context_len = ctx
+        # trace counters: incremented only when jit actually (re)traces
+        self.prefill_traces = 0
+        self.decode_traces = 0
 
         # the sparsity policy is a jit ARGUMENT (pytree): per-call overrides
         # with the same structure change only threshold leaves -> no retrace
         def prefill_step(params, batch, policy):
+            self.prefill_traces += 1
             d = dist if (dist is None or policy is None) else \
                 dataclasses.replace(dist, policy=policy)
             return M.make_prefill_step(cfg, cache_len=ctx, window=window,
-                                       dist=d,
-                                       cache_dtype=cache_dtype)(params, batch)
+                                       dist=d, cache_dtype=cache_dtype,
+                                       metrics=metrics)(params, batch)
 
         def serve_step(params, token, cache, policy):
+            self.decode_traces += 1
             d = dist if (dist is None or policy is None) else \
                 dataclasses.replace(dist, policy=policy)
             return M.make_serve_step(cfg, window=window,
@@ -172,7 +182,16 @@ class ServingEngine(EngineBase):
                 tuple(float(l) for l in
                       jax.tree_util.tree_flatten(gen.policy)[0]))
 
-    def step(self) -> bool:
+    def _trace_count(self) -> int:
+        return self.prefill_traces + self.decode_traces
+
+    def _device_metrics(self):
+        return self._dev_metrics
+
+    def _metrics_hook(self, snap: MetricsSnapshot) -> None:
+        snap.gauge("repro_engine_batch_size", self.batch_size)
+
+    def _step(self) -> bool:
         """Serve ONE convoy batch to completion: pop up to ``batch_size``
         queued requests (cut early at a per-request policy-override change —
         the policy is one jit argument per batch), prefill them together,
@@ -195,35 +214,54 @@ class ServingEngine(EngineBase):
         b = self._make_batch([r.prompt for _, r in batch])
         policy = self._policy_for(gens[0])
         t0 = time.perf_counter()
-        logits, cache = self._prefill(self.params, b, policy)
-        logits.block_until_ready()
+        with self.tracer.span("prefill", batch=B):
+            with jax.profiler.TraceAnnotation("engine_prefill"):
+                logits, cache = self._prefill(self.params, b, policy)
+            logits.block_until_ready()
         t_prefill = time.perf_counter() - t0
         last = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         done = np.zeros(B, bool)
         max_steps = max(g.max_new_tokens for g in gens)
         t0 = time.perf_counter()
-        for step in range(max_steps):
-            last_np = np.asarray(last)
-            for i in range(B):
-                if done[i]:
-                    continue
-                res = self._results[uids[i]]
-                res.tokens.append(int(last_np[i, 0]))
-                if (last_np[i, 0] == gens[i].eos_token
-                        or len(res.tokens) >= gens[i].max_new_tokens):
-                    done[i] = True
-            if done.all():
-                break
-            logits, cache = self._serve(self.params, last, cache, policy)
-            last = self._next_tokens(logits, gens, uids, step)
+        with self.tracer.span("decode_loop", batch=B):
+            for step in range(max_steps):
+                last_np = np.asarray(last)
+                for i in range(B):
+                    if done[i]:
+                        continue
+                    self._record_token(uids[i], int(last_np[i, 0]))
+                    res = self._results[uids[i]]
+                    if (last_np[i, 0] == gens[i].eos_token
+                            or len(res.tokens) >= gens[i].max_new_tokens):
+                        done[i] = True
+                if done.all():
+                    break
+                with jax.profiler.TraceAnnotation("engine_decode"):
+                    logits, cache = self._serve(self.params, last, cache,
+                                                policy)
+                last = self._next_tokens(logits, gens, uids, step)
         t_decode = time.perf_counter() - t0
-        if isinstance(cache, dict) and "moe_overflow" in cache:
-            self.overflow_pairs += int(cache["moe_overflow"])
+        # drain the batch's device metrics into the engine accumulator with
+        # ONE lazy device-side add — no host transfer until .metrics()
+        m = cache.get("metrics") if isinstance(cache, dict) else None
+        if m is not None:
+            self._dev_metrics = m if self._dev_metrics is None \
+                else self._dev_metrics + m
         now = self._now()
         for u in uids:
             self._results[u].prefill_s = t_prefill
             self._results[u].decode_s = t_decode
             self._results[u].finished_s = now
+            self.tracer.instant("retire", uid=u)
+
+    @property
+    def overflow_pairs(self) -> int:
+        """Total MoE capacity-overflow drops across every batch served
+        (reads the device-resident obs MetricsState — one scalar
+        transfer, no per-step sync)."""
+        if self._dev_metrics is None:
+            return 0
+        return int(self._dev_metrics.overflow_pairs)
 
     def _next_tokens(self, logits, gens, uids, step):
         greedy = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
@@ -282,7 +320,8 @@ class ContinuousBatchingEngine(EngineBase):
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 8,
                  max_prompt_len: int = 512, max_new_tokens: int = 128,
                  pad_token: int = 0, dist: Optional[DistContext] = None,
-                 exact_moe: bool = True, cache_dtype=jnp.bfloat16):
+                 exact_moe: bool = True, cache_dtype=jnp.bfloat16,
+                 metrics: bool = True):
         if cfg.family in ("audio", "ssm", "hybrid"):
             # ssm/hybrid: the Mamba recurrence runs over trailing pad tokens
             # during right-padded prefill and pollutes the captured decode
@@ -291,7 +330,7 @@ class ContinuousBatchingEngine(EngineBase):
             raise NotImplementedError(
                 f"continuous batching supports attention-based decoder-only "
                 f"families, not {cfg.family!r}")
-        super().__init__()
+        super().__init__(metrics=metrics)
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -343,24 +382,31 @@ class ContinuousBatchingEngine(EngineBase):
                     (1, cfg.n_frontend_tokens, cfg.d_model))
             logits, small = transformer.prefill(
                 params, batch, cfg, cache_len=ctx_len, dist=d,
-                cache_dtype=cache_dtype)
+                cache_dtype=cache_dtype, metrics=metrics)
             last = jax.lax.dynamic_index_in_dim(logits[0], valid_len - 1,
                                                 axis=0, keepdims=False)
             first_tok = jnp.argmax(last).astype(jnp.int32)
+            # per-slot KV layers are batch-inserted; the engine-wide obs
+            # seam ("metrics" / legacy "moe_overflow") merges additively
             small.pop("pos")
+            m_small = small.pop("metrics", None)
             of_small = small.pop("moe_overflow", None)
-            skip = ("pos", "moe_overflow")
+            skip = ("pos", "metrics", "moe_overflow")
             rest = {k: v for k, v in cache.items() if k not in skip}
+            small = dict(small)      # match rest's plain-dict treedef
 
             def ins(big, sm):
                 start = (0, slot) + (0,) * (big.ndim - 2)
                 return jax.lax.dynamic_update_slice(
                     big, sm.astype(big.dtype), start)
 
-            new = jax.tree.map(ins, rest, small)
+            new = transformer.ObsCache(jax.tree.map(ins, rest, small))
             new["pos"] = cache["pos"].at[slot].set(
                 self._prefix + valid_len)
-            if "moe_overflow" in cache:
+            if "metrics" in cache:
+                new["metrics"] = cache["metrics"] + m_small \
+                    if m_small is not None else cache["metrics"]
+            elif "moe_overflow" in cache:
                 new["moe_overflow"] = cache["moe_overflow"] + (
                     of_small if of_small is not None else 0)
             return first_tok, new
@@ -382,8 +428,10 @@ class ContinuousBatchingEngine(EngineBase):
         # copying the whole (n_layers, n_slots, context_len, ...) cache
         self._prefill_insert = jax.jit(prefill_insert, donate_argnums=(4,))
         self._decode = jax.jit(decode, donate_argnums=(2,))
+        spec = metrics_spec(cfg, params) if metrics else None
         self._cache = M.init_cache(cfg, n_slots, self.context_len,
-                                   per_slot_pos=True, dtype=cache_dtype)
+                                   per_slot_pos=True, dtype=cache_dtype,
+                                   metrics_spec=spec)
         self._slots: List[Optional[_SlotState]] = [None] * n_slots
         self._last = np.full((n_slots, 1), pad_token, np.int32)
         self._active = np.zeros((n_slots,), bool)
@@ -439,6 +487,8 @@ class ContinuousBatchingEngine(EngineBase):
     def _retire(self, slot: int):
         st = self._slots[slot]
         self._results[st.uid].finished_s = self._now()
+        self.tracer.instant("retire", uid=st.uid, slot=slot,
+                            n_tokens=st.n_emitted)
         self._slots[slot] = None
         self._active[slot] = False
         self._last[slot, 0] = self.pad_token
@@ -466,11 +516,14 @@ class ContinuousBatchingEngine(EngineBase):
                 req_policy = jax.tree_util.tree_unflatten(
                     self._policy_treedef, [jnp.asarray(l) for l in leaves])
             t0 = time.perf_counter()
-            first, self._cache = self._prefill_insert(
-                self.params, jnp.asarray(toks),
-                jnp.asarray(len(req.prompt), jnp.int32),
-                jnp.asarray(slot, jnp.int32), self._cache, req_policy)
-            first = int(first)
+            with self.tracer.span("prefill_insert", uid=uid, slot=slot,
+                                  prompt_len=len(req.prompt)), \
+                    jax.profiler.TraceAnnotation("engine_prefill_insert"):
+                first, self._cache = self._prefill_insert(
+                    self.params, jnp.asarray(toks),
+                    jnp.asarray(len(req.prompt), jnp.int32),
+                    jnp.asarray(slot, jnp.int32), self._cache, req_policy)
+                first = int(first)
             res = self._results[uid]
             res.prefill_s = time.perf_counter() - t0
             self._slots[slot] = _SlotState(uid=uid, gen=req.gen)
@@ -488,21 +541,23 @@ class ContinuousBatchingEngine(EngineBase):
         or budget exhaustion (mirrors the synchronized engine: the EOS token
         itself is emitted, then the request stops)."""
         st = self._slots[slot]
-        self._results[st.uid].tokens.append(token)
+        self._record_token(st.uid, token)
         st.n_emitted += 1
         if token == st.gen.eos_token or st.n_emitted >= st.gen.max_new_tokens:
             self._retire(slot)
 
-    def step(self) -> bool:
+    def _step(self) -> bool:
         """One scheduler iteration: admit waiting requests into free slots,
         then run one batched decode step over all active slots. Returns True
         while there is (or may be) work left."""
         self._admit()
         if not self._active.any():
             return bool(self._queue)
-        logits, greedy, self._cache = self._decode(
-            self.params, jnp.asarray(self._last), self._cache,
-            jnp.asarray(self._active), self._stacked_policy())
+        with self.tracer.span("decode", batch=int(self._active.sum())), \
+                jax.profiler.TraceAnnotation("engine_decode"):
+            logits, greedy, self._cache = self._decode(
+                self.params, jnp.asarray(self._last), self._cache,
+                jnp.asarray(self._active), self._stacked_policy())
         self.decode_steps += 1
         greedy_np = np.asarray(greedy)
         need_sampling = any(st is not None and st.gen.temperature > 0
@@ -531,6 +586,24 @@ class ContinuousBatchingEngine(EngineBase):
         self.max_concurrency = 0
         self.decode_steps = 0
 
+    # -- observability hooks (EngineBase) -------------------------------
+
+    def _trace_count(self) -> int:
+        return self.prefill_traces + self.decode_traces
+
+    def _device_metrics(self):
+        if isinstance(self._cache, dict):
+            return self._cache.get("metrics")
+        return None
+
+    def _metrics_hook(self, snap) -> None:
+        snap.gauge("repro_engine_slots", float(self.n_slots))
+        snap.gauge("repro_engine_free_slots", float(self.free_slots))
+        snap.counter("repro_engine_decode_steps_total",
+                     float(self.decode_steps))
+        snap.counter("repro_requests_admitted_total", float(self.n_admitted))
+        snap.counter("repro_requests_retired_total", float(self.n_retired))
+
     @property
     def overflow_pairs(self) -> int:
         """Total token-expert pairs silently dropped by capacity overflow
@@ -539,8 +612,11 @@ class ContinuousBatchingEngine(EngineBase):
         and local-expert overflow, which exact_moe does NOT pin). The
         counter rides in the decode cache, so reading it costs one scalar
         transfer — no per-step sync."""
+        m = self._device_metrics()
+        if m is not None:
+            return int(m.overflow_pairs)
         if isinstance(self._cache, dict) and "moe_overflow" in self._cache:
-            return int(self._cache["moe_overflow"])
+            return int(dict.__getitem__(self._cache, "moe_overflow"))
         return 0
 
     @property

@@ -47,6 +47,7 @@ from ..configs.base import ModelConfig
 from ..models import attention as attn
 from ..models import transformer
 from ..models.transformer import DistContext
+from ..obs import MetricsSnapshot, metrics_spec
 from .api import EngineBase, GenerationConfig, Request
 from .engine import exact_moe_dist, merge_policy_override
 
@@ -74,6 +75,20 @@ class PageAllocator:
 
     def available(self) -> int:
         return len(self._free) + len(self._lru)
+
+    # page-state census (page 0, the write sink, is never handed out and
+    # is excluded from all three states)
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_parked(self) -> int:
+        return len(self._lru)
+
+    @property
+    def n_held(self) -> int:
+        return self.n_pages - 1 - self.n_free - self.n_parked
 
     def alloc(self) -> int:
         """Take a fresh page (refcount 1), evicting the LRU-oldest parked
@@ -143,14 +158,15 @@ class PagedEngine(EngineBase):
                  max_prompt_len: int = 512, max_new_tokens: int = 128,
                  n_pages: Optional[int] = None, pad_token: int = 0,
                  dist: Optional[DistContext] = None, exact_moe: bool = True,
-                 cache_dtype=jnp.bfloat16, prefix_cache: bool = True):
+                 cache_dtype=jnp.bfloat16, prefix_cache: bool = True,
+                 metrics: bool = True):
         if (cfg.family in ("audio", "ssm", "hybrid")
                 or cfg.attn_kind == "mla" or cfg.frontend):
             raise NotImplementedError(
                 "paged serving supports GQA attention decoder-only text "
                 "models (chunked prefill has no recurrent-state or "
                 "frontend-token analog yet)")
-        super().__init__()
+        super().__init__(metrics=metrics)
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -175,7 +191,8 @@ class PagedEngine(EngineBase):
         self._layout = attn.PagedLayout(page_size)
         self._page_table = np.zeros((n_slots, self.pages_per_slot), np.int32)
         self._cache = transformer.init_paged_cache(
-            cfg, n_pages, page_size, n_slots, dtype=cache_dtype)
+            cfg, n_pages, page_size, n_slots, dtype=cache_dtype,
+            metrics_spec=metrics_spec(cfg, params) if metrics else None)
         self._slots: List[Optional[_SlotState]] = [None] * n_slots
         self._last = np.full((n_slots, 1), pad_token, np.int32)
         self._active = np.zeros((n_slots,), bool)
@@ -347,6 +364,8 @@ class PagedEngine(EngineBase):
     def _retire(self, slot: int):
         st = self._slots[slot]
         self._results[st.uid].finished_s = self._now()
+        self.tracer.instant("retire", uid=st.uid, slot=slot,
+                            n_tokens=st.n_emitted)
         for page in self._page_table[slot]:
             if page:
                 self._alloc.release(int(page))
@@ -360,7 +379,7 @@ class PagedEngine(EngineBase):
 
     def _emit(self, slot: int, token: int):
         st = self._slots[slot]
-        self._results[st.uid].tokens.append(token)
+        self._record_token(st.uid, token)
         st.n_emitted += 1
         if token == st.gen.eos_token or st.n_emitted >= st.gen.max_new_tokens:
             self._retire(slot)
@@ -384,11 +403,14 @@ class PagedEngine(EngineBase):
         toks = np.full((1, self.chunk_size), self.pad_token, np.int32)
         toks[0, :valid] = st.prompt[start:start + valid]
         t0 = time.perf_counter()
-        first, self._cache = self._chunk_insert(
-            self.params, jnp.asarray(toks), jnp.asarray(slot, jnp.int32),
-            jnp.asarray(start, jnp.int32), jnp.asarray(valid, jnp.int32),
-            self._cache, jnp.asarray(self._page_table),
-            self._slot_policy(st.gen))
+        with self.tracer.span("prefill_chunk", uid=st.uid, slot=slot,
+                              start=start, n_tokens=valid), \
+                jax.profiler.TraceAnnotation("engine_prefill_chunk"):
+            first, self._cache = self._chunk_insert(
+                self.params, jnp.asarray(toks), jnp.asarray(slot, jnp.int32),
+                jnp.asarray(start, jnp.int32), jnp.asarray(valid, jnp.int32),
+                self._cache, jnp.asarray(self._page_table),
+                self._slot_policy(st.gen))
         self._results[st.uid].prefill_s += time.perf_counter() - t0
         self.chunk_steps += 1
         self.prefill_tokens += valid
@@ -410,7 +432,7 @@ class PagedEngine(EngineBase):
                                    int(self._active.sum()))
         return True
 
-    def step(self) -> bool:
+    def _step(self) -> bool:
         """One scheduler iteration: admit queued requests into free slots,
         advance one prefilling slot by one chunk, then one batched decode
         step over all active slots. Returns True while work may remain."""
@@ -418,10 +440,12 @@ class PagedEngine(EngineBase):
         self._advance_prefill()
         if not self._active.any():
             return self._has_work()
-        logits, greedy, self._cache = self._decode(
-            self.params, jnp.asarray(self._last), self._cache,
-            jnp.asarray(self._active), jnp.asarray(self._page_table),
-            self._stacked_policy())
+        with self.tracer.span("decode", batch=int(self._active.sum())), \
+                jax.profiler.TraceAnnotation("engine_decode"):
+            logits, greedy, self._cache = self._decode(
+                self.params, jnp.asarray(self._last), self._cache,
+                jnp.asarray(self._active), jnp.asarray(self._page_table),
+                self._stacked_policy())
         self.decode_steps += 1
         greedy_np = np.asarray(greedy)
         need_sampling = any(st is not None and not st.prefilling
@@ -460,8 +484,11 @@ class PagedEngine(EngineBase):
 
     @property
     def overflow_pairs(self) -> int:
+        m = self._device_metrics()
+        if m is not None:
+            return int(m.overflow_pairs)
         if isinstance(self._cache, dict) and "moe_overflow" in self._cache:
-            return int(self._cache["moe_overflow"])
+            return int(dict.__getitem__(self._cache, "moe_overflow"))
         return 0
 
     @property
@@ -471,6 +498,38 @@ class PagedEngine(EngineBase):
     @property
     def queued(self) -> int:
         return len(self._queue)
+
+    # -- observability hooks (EngineBase) --------------------------------
+
+    def _trace_count(self) -> int:
+        return self.chunk_traces + self.decode_traces
+
+    def _device_metrics(self):
+        if isinstance(self._cache, dict):
+            return self._cache.get("metrics")
+        return None
+
+    def _metrics_hook(self, snap: MetricsSnapshot) -> None:
+        snap.counter("repro_prefix_cache_total", float(self._alloc.hits),
+                     event="hit")
+        snap.counter("repro_prefix_cache_total", float(self._alloc.misses),
+                     event="miss")
+        snap.counter("repro_prefix_cache_total", float(self._alloc.evictions),
+                     event="eviction")
+        snap.gauge("repro_page_pool_pages", float(self._alloc.n_free),
+                   state="free")
+        snap.gauge("repro_page_pool_pages", float(self._alloc.n_held),
+                   state="held")
+        snap.gauge("repro_page_pool_pages", float(self._alloc.n_parked),
+                   state="parked")
+        snap.gauge("repro_engine_slots", float(self.n_slots))
+        snap.gauge("repro_engine_free_slots", float(self.free_slots))
+        snap.counter("repro_engine_decode_steps_total",
+                     float(self.decode_steps))
+        snap.counter("repro_engine_chunk_steps_total",
+                     float(self.chunk_steps))
+        snap.counter("repro_requests_admitted_total", float(self.n_admitted))
+        snap.counter("repro_requests_retired_total", float(self.n_retired))
 
     def reset_stats(self):
         """Zero scheduler statistics (trace counters are kept: warmup
