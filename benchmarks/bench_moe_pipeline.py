@@ -10,7 +10,10 @@ kernel exists to eliminate; see README "Dispatch architecture").
 
 Timings on this CPU container run the kernels in interpret mode, so the
 µs numbers track *plan/dispatch overhead*, not MXU economics — the HLO
-bytes/shape accounting is the backend-independent signal.
+bytes/shape accounting is the backend-independent signal. Full runs add
+prefill-scale rows (T=4096/8192) that compare buffer vs resident-fused vs
+streamed-fused and gate streamed <= buffer; streamed must match resident
+bit-for-bit at every scale.
 
 Emits/APPENDS to ``BENCH_moe_pipeline.json`` (repo root by default): the
 file holds a ``runs`` list — one entry per invocation — so the trajectory
@@ -38,8 +41,15 @@ from repro.models.layers import split_params
 
 from .common import Row, rel_err, sharp_router_params, time_fn
 
-FULL_TOKENS = [128, 256]
+# Full runs include prefill-scale rows: at T >= PREFILL_T the resident
+# fused kernel would need the whole (T, d) activation + f32 accumulator in
+# VMEM, so these rows are the ones that exercise (and gate) the streamed
+# HBM<->VMEM DMA rewrite. Interpret mode makes them slow — iters drops to
+# PREFILL_ITERS there.
+FULL_TOKENS = [128, 256, 4096, 8192]
 SMOKE_TOKENS = [64]
+PREFILL_T = 4096
+PREFILL_ITERS = 2
 
 
 def _setup(seed: int = 0):
@@ -54,37 +64,48 @@ def _setup(seed: int = 0):
 
 
 def _paths(cfg, params, policy, T: int):
-    """(buffer_fn, fused_fn, x, capacity) — jitted, same routing inside."""
+    """(buffer_fn, fused_fn, resident_fn, x, capacity) — jitted, same
+    routing inside. ``fused_fn`` is the streamed kernel (the production
+    default); ``resident_fn`` is the whole-array-resident variant it
+    replaced, kept as the bit-exactness yardstick for the DMA machinery."""
     E = params["w1"].shape[0] // policy.partition_p
     capacity = moe_mod.capacity_for(T, cfg.top_k, E, policy.capacity_factor)
 
-    def run(x, fused: bool):
+    def run(x, fused: bool, streamed: bool = True):
         pairs = policy.route(params, x, cfg)
         return moe_mod.moe_forward_dispatch(
             params, x, cfg, pairs=pairs, capacity=capacity,
             use_kernel=not fused, mode_grouped=policy.kernel_mode_grouping,
-            fused_pipeline=fused, return_overflow=True)
+            fused_pipeline=fused, fused_streamed=streamed,
+            return_overflow=True)
 
     x = jax.random.normal(jax.random.PRNGKey(T), (T, cfg.d_model))
     buffer_fn = jax.jit(lambda x: run(x, False))
     fused_fn = jax.jit(lambda x: run(x, True))
-    return buffer_fn, fused_fn, x, capacity
+    resident_fn = jax.jit(lambda x: run(x, True, streamed=False))
+    return buffer_fn, fused_fn, resident_fn, x, capacity
 
 
 def run(smoke: bool = False, out_path: str | None = None) -> list[Row]:
     cfg, params, policy = _setup()
     E = params["w1"].shape[0] // policy.partition_p
     d = cfg.d_model
-    iters = 2 if smoke else 5
     rows: list[Row] = []
     results = []
     for T in (SMOKE_TOKENS if smoke else FULL_TOKENS):
-        buffer_fn, fused_fn, x, capacity = _paths(cfg, params, policy, T)
+        iters = PREFILL_ITERS if T >= PREFILL_T else (2 if smoke else 5)
+        buffer_fn, fused_fn, resident_fn, x, capacity = _paths(
+            cfg, params, policy, T)
 
         yb, ovb = buffer_fn(x)
         yf, ovf = fused_fn(x)
+        yr, ovr = resident_fn(x)
+        # streamed and resident share math and accumulation order; the DMA
+        # staging must not perturb a single bit.
+        assert (yf == yr).all() and int(ovf) == int(ovr), (
+            f"streamed kernel diverged from resident variant at T={T}")
         err = rel_err(yf, yb)
-        assert err < 1e-5, f"fused path diverged from oracle: rel_err={err}"
+        assert err <= 1e-6, f"fused path diverged from oracle: rel_err={err}"
         assert int(ovb) == int(ovf), (
             f"overflow units differ: buffer={int(ovb)} fused={int(ovf)}")
 
@@ -104,16 +125,24 @@ def run(smoke: bool = False, out_path: str | None = None) -> list[Row]:
 
         t_buf = time_fn(buffer_fn, x, iters=iters, warmup=1)
         t_fus = time_fn(fused_fn, x, iters=iters, warmup=1)
+        t_res = time_fn(resident_fn, x, iters=iters, warmup=1)
+        if T >= PREFILL_T:
+            assert t_fus <= t_buf, (
+                f"REGRESSION: streamed fused pipeline slower than buffer "
+                f"path at prefill scale T={T}: fused={t_fus:.0f}us "
+                f"buffer={t_buf:.0f}us")
         tag = f"moe_pipeline/T{T}_E{E}_cap{capacity}"
         rows.append((f"{tag}/buffer", t_buf,
                      f"hbm_bytes={cb.hbm_bytes:.0f} cap_bufs={nb}"))
         rows.append((f"{tag}/fused", t_fus,
                      f"hbm_bytes={cf.hbm_bytes:.0f} cap_bufs=0 "
                      f"rel_err={err:.2e}"))
+        rows.append((f"{tag}/resident", t_res, "bit-exact vs fused"))
         results.append({
             "T": T, "E": E, "d": d, "f": cfg.d_expert,
             "K": cfg.top_k, "P": policy.partition_p, "capacity": capacity,
-            "buffer_us": t_buf, "fused_us": t_fus,
+            "buffer_us": t_buf, "fused_us": t_fus, "resident_us": t_res,
+            "streamed": True,
             "buffer_hbm_bytes": cb.hbm_bytes, "fused_hbm_bytes": cf.hbm_bytes,
             "buffer_capacity_buffers": nb, "fused_capacity_buffers": nf,
             "rel_err_vs_oracle": err, "overflow_pairs": int(ovb),
@@ -133,7 +162,9 @@ def run(smoke: bool = False, out_path: str | None = None) -> list[Row]:
         "bench": "moe_pipeline",
         "unit": "us_per_layer_forward",
         "note": "buffer path (gather_rows -> grouped_swiglu -> unpermute) "
-                "vs single fused Pallas pipeline; capacity_buffers counts "
+                "vs single fused Pallas pipeline (fused_us = streamed "
+                "kernel; resident_us = whole-array-resident variant, "
+                "bit-exact vs streamed); capacity_buffers counts "
                 "(E, capacity, d)-shaped HLO instructions (must be 0 on "
                 "the fused path); interpret-mode timings on CPU",
         "runs": [],

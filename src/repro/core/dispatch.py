@@ -197,6 +197,35 @@ def prefer_cumsum_dispatch(n_pairs: int, n_groups: int,
     return backend == "cpu" and n_groups <= 8 and n_pairs >= 8192
 
 
+def prefer_fused_pipeline(n_tokens: int, n_groups: int, *,
+                          use_kernel: bool = False,
+                          backend: Optional[str] = None) -> bool:
+    """Per-shape fused-vs-buffer heuristic (mirrors
+    ``prefer_cumsum_dispatch``): should the MoE forward run the streamed
+    fused dispatch->FFN->combine Pallas pipeline instead of the
+    gather->grouped-FFN->unpermute buffer path?
+
+    On TPU/GPU the streamed kernel is the default at EVERY token count:
+    its VMEM working set is independent of T (pair maps in SMEM, x/out in
+    HBM with double-buffered DMA), it never materializes the
+    (E, capacity, d) buffer, and the bench trajectory
+    (BENCH_moe_pipeline.json) shows it at or above buffer throughput from
+    decode (T=64) through prefill (T=8192). On CPU the kernels run in
+    interpret mode, where the fused kernel still beats the interpreted
+    buffer-path Pallas FFN (same trajectory) but loses to the pure-XLA
+    einsum the non-kernel policies use — so fused follows ``use_kernel``
+    there. All paths agree to fp tolerance; the choice is performance
+    only."""
+    if backend is None:
+        backend = jax.default_backend()
+    del n_tokens, n_groups          # today's rule is shape-independent;
+    #                                 the signature keeps per-shape tuning
+    #                                 open without call-site churn
+    if backend != "cpu":
+        return True
+    return use_kernel
+
+
 def dispatch_plan(group, keep=None, *, n_groups: int, capacity: int,
                   major_only=None, backend: Optional[str] = None
                   ) -> DispatchPlan:

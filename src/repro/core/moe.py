@@ -214,7 +214,8 @@ def _fused_pipeline_block(block_c: int, capacity: int) -> int:
 
 def _fused_pipeline_dispatch(params, x, cfg, pairs: SubExpertPairs, p: int,
                              capacity: int, mode_grouped: bool,
-                             block_c: int = 128, block_f: int = 128):
+                             block_c: int = 128, block_f: int = 128,
+                             streamed: bool = True):
     """The single fused Pallas pipeline (ROADMAP item 4): the kernel
     consumes the DispatchPlan directly — sort permutation + segment counts
     — gathering token rows from the flat (T, d) array, running the
@@ -255,7 +256,8 @@ def _fused_pipeline_dispatch(params, x, cfg, pairs: SubExpertPairs, p: int,
     y = kops.fused_moe_pipeline(
         x, params["w1"], params["w3"], params["w2"], plan.group_offsets,
         cf, cm, tok_sorted, w_sorted, capacity=capacity, p_factor=p_factor,
-        n_minor_start=n_minor_start, block_c=block_c, block_f=block_f)
+        n_minor_start=n_minor_start, block_c=block_c, block_f=block_f,
+        streamed=streamed)
     return y, overflow
 
 
@@ -265,7 +267,8 @@ def moe_forward_dispatch(params, x, cfg, pairs: Optional[SubExpertPairs] = None,
                          use_kernel: bool = False,
                          return_overflow: bool = False,
                          mode_grouped: bool = False,
-                         fused_pipeline: bool = False):
+                         fused_pipeline: Optional[bool] = None,
+                         fused_streamed: bool = True):
     """Sort-based gather -> batched expert GEMM -> gather back. Exact w.r.t.
     the reference whenever no token exceeds capacity.
 
@@ -284,10 +287,17 @@ def moe_forward_dispatch(params, x, cfg, pairs: Optional[SubExpertPairs] = None,
     never dispatched).
 
     ``fused_pipeline`` (``SparsityPolicy.fused_pipeline`` supplies it in
-    production) routes through the single fused Pallas kernel — dispatch
-    gather, grouped SwiGLU, and weighted combine in one launch, with no
-    (E, capacity, d) HBM buffer and no unpermute read-back. The buffer path
-    below stays as its bit-exactness oracle.
+    production) routes through the single fused streamed Pallas kernel —
+    dispatch gather, grouped SwiGLU, and weighted combine in one launch,
+    with no (E, capacity, d) HBM buffer and no unpermute read-back, and a
+    VMEM working set independent of T (pair maps in scalar-prefetch SMEM,
+    x/out in HBM behind double-buffered DMA). ``None`` (the default)
+    resolves per shape/backend via
+    ``core.dispatch.prefer_fused_pipeline`` — fused everywhere on
+    TPU/GPU, fused iff ``use_kernel`` on CPU interpret. The buffer path
+    below stays as its bit-exactness oracle. ``fused_streamed=False``
+    selects the whole-array-resident kernel variant (identical math and
+    accumulation order — bit-exact vs streamed; bench/debug knob only).
 
     ``return_overflow``: also return the scalar count of kept pairs dropped
     by capacity overflow (see ``dispatch_indices``). Always in sub-pair
@@ -302,10 +312,13 @@ def moe_forward_dispatch(params, x, cfg, pairs: Optional[SubExpertPairs] = None,
         capacity = capacity_for(T, K, E, capacity_factor)
 
     p = _pairs_partition_p(pairs)
+    if fused_pipeline is None:
+        fused_pipeline = dispatch_mod.prefer_fused_pipeline(
+            T, E, use_kernel=use_kernel)
     if fused_pipeline:
         y, overflow = _fused_pipeline_dispatch(
             params, x, cfg, pairs, p, capacity,
-            mode_grouped=mode_grouped and p > 1)
+            mode_grouped=mode_grouped and p > 1, streamed=fused_streamed)
         out = y.astype(x.dtype) + _shared_out(params, x)
         return (out, overflow) if return_overflow else out
 

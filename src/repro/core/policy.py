@@ -95,9 +95,15 @@ class SparsityPolicy:
     reconstruction: bool = True     # reorder neurons before partition
     # --- execution hints (static) ---
     use_kernel: bool = False        # Pallas grouped kernel on expert GEMMs
-    fused_pipeline: bool = False    # single fused Pallas dispatch->FFN->
-    #                                 combine kernel (no (E, C, d) HBM
-    #                                 buffer, no unpermute read-back)
+    fused_pipeline: Optional[bool] = None   # single fused (streamed) Pallas
+    #                                 dispatch->FFN->combine kernel (no
+    #                                 (E, C, d) HBM buffer, no unpermute
+    #                                 read-back). None = auto: resolved per
+    #                                 shape/backend at trace time by
+    #                                 core.dispatch.prefer_fused_pipeline
+    #                                 (TPU/GPU: always fused; CPU interpret:
+    #                                 fused iff use_kernel). True/False
+    #                                 force the choice.
     capacity_factor: float = 2.0    # dispatch-path expert capacity factor
     exact_capacity: bool = False    # capacity = T: no overflow drop ever,
     #                                 so MoE outputs are batch-invariant

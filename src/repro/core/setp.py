@@ -180,7 +180,12 @@ def _setp_body(wg, w1, w3, w2, x_loc, *, cfg, n_dev: int, axis: str,
     c2 = _ceil_mult(local_cap_factor * n_dev * cap / L, cap_multiple)
     plan_loc = dispatch_mod.sort_dispatch(loc, valid, n_groups=L,
                                           capacity=c2, major_only=mfl)
-    if getattr(policy, "fused_pipeline", False):
+    fused = getattr(policy, "fused_pipeline", None)
+    if fused is None:
+        # auto: same per-shape/backend heuristic as the dispatch path
+        fused = dispatch_mod.prefer_fused_pipeline(rx.shape[0], L,
+                                                   use_kernel=use_kernel)
+    if fused:
         # single fused Pallas pipeline: the kernel gathers received rows
         # straight through plan_loc.perm, runs the grouped SwiGLU, and
         # scatters back per received row — no (L, c2, d) buffer, no

@@ -7,6 +7,21 @@ analyzers in ``repro.lint.pallas_passes`` consume. Because the kernel
 launch and the lint read one source of truth, the VMEM-footprint /
 MXU-alignment / grid-coverage checks can never drift from what actually
 runs, and they run on CPU with no TPU and no tracing at all.
+
+Residency model: each ``BlockUse`` carries a memory ``space``:
+
+- ``"vmem"`` — lives in vector memory. Streamed non-scratch blocks are
+  double-buffered by the Pallas pipeline (x2); resident blocks and
+  scratch count once.
+- ``"smem"`` — scalar memory (control maps fed through
+  ``PrefetchScalarGridSpec``); counted against the SMEM budget only.
+- ``"any"``  — compiler-placed (HBM at these sizes); never touches the
+  VMEM budget. The kernel reaches it with explicit DMA, and
+  ``dma_buffers`` records how many VMEM staging copies of one block the
+  kernel keeps in flight (2 = double-buffered). Staging tiles appear as
+  their own scratch blocks, so ``dma_buffers`` is audit metadata — the
+  lint DMA pass checks that streamed-in ``any`` blocks are at least
+  double-buffered.
 """
 from __future__ import annotations
 
@@ -28,6 +43,10 @@ class BlockUse:
     #                                 whole-array resident for the launch
     control: bool = False           # scalar control data (counts, offsets,
     #                                 pair maps) — exempt from MXU tiling
+    space: str = "vmem"             # "vmem" | "smem" | "any"
+    dma_buffers: int = 0            # for space="any": VMEM staging copies
+    #                                 the kernel keeps in flight (2 =
+    #                                 double-buffered explicit DMA)
 
     @property
     def nbytes(self) -> int:
@@ -51,16 +70,28 @@ class KernelSpec:
 
     def vmem_bytes(self) -> int:
         """Static VMEM working-set estimate for one grid step: streamed
-        blocks are double-buffered by the Pallas pipeline (x2), resident
-        blocks and scratch are allocated once."""
+        vmem blocks are double-buffered by the Pallas pipeline (x2),
+        resident blocks and scratch are allocated once. SMEM- and
+        ANY-space blocks do not occupy VMEM (their staging tiles are
+        separate scratch entries)."""
         total = 0
         for b in self.blocks:
+            if b.space != "vmem":
+                continue
             mult = 2 if (b.streamed and b.kind != "scratch") else 1
             total += mult * b.nbytes
         return total
 
+    def smem_bytes(self) -> int:
+        """Static SMEM working set: scalar-prefetch maps and any other
+        SMEM-space blocks, allocated once for the launch."""
+        return sum(b.nbytes for b in self.blocks if b.space == "smem")
+
     def blocks_of_kind(self, kind: str) -> Tuple[BlockUse, ...]:
         return tuple(b for b in self.blocks if b.kind == kind)
+
+    def blocks_of_space(self, space: str) -> Tuple[BlockUse, ...]:
+        return tuple(b for b in self.blocks if b.space == space)
 
 
 def dtype_name(dtype) -> str:

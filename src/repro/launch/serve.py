@@ -60,10 +60,18 @@ def main():
                          "synthetic calibration activations")
     ap.add_argument("--dualsparse", action="store_true",
                     help="DEPRECATED alias for --policy 2t")
-    ap.add_argument("--fused-pipeline", action="store_true",
-                    help="run MoE layers through the single fused Pallas "
-                         "dispatch->FFN->combine kernel (no (E, C, d) HBM "
-                         "buffer, no unpermute read-back)")
+    ap.add_argument("--fused-pipeline", action="store_true", default=None,
+                    help="force MoE layers through the single fused "
+                         "streamed Pallas dispatch->FFN->combine kernel "
+                         "(no (E, C, d) HBM buffer, no unpermute "
+                         "read-back). Default is AUTO: the per-shape "
+                         "heuristic (core.dispatch.prefer_fused_pipeline) "
+                         "picks fused wherever the bench shows a win — "
+                         "always on TPU/GPU, with use_kernel on CPU")
+    ap.add_argument("--no-fused-pipeline", dest="fused_pipeline",
+                    action="store_false",
+                    help="force the buffer path (disable the fused kernel "
+                         "even where the heuristic would pick it)")
     ap.add_argument("--seed", type=int, default=0)
     # observability (repro.obs)
     ap.add_argument("--no-metrics", action="store_true",
@@ -99,7 +107,10 @@ def main():
     policy_name = policy_name or "none"
 
     dist = None
-    if policy_name != "none" and cfg.is_moe and cfg.dualsparse.enabled:
+    # an explicit --fused-pipeline/--no-fused-pipeline needs a policy object
+    # to carry the hint, so it also builds one for --policy none
+    force_dist = policy_name != "none" or args.fused_pipeline is not None
+    if force_dist and cfg.is_moe and cfg.dualsparse.enabled:
         policy = make_policy(policy_name, cfg.dualsparse,
                              drop_target=args.drop_target,
                              fused_pipeline=args.fused_pipeline)

@@ -34,6 +34,10 @@ PIPELINE_ROW = {"T": int, "E": int, "d": int, "f": int, "K": int, "P": int,
                 "buffer_hbm_bytes": _NUM, "fused_hbm_bytes": _NUM,
                 "buffer_capacity_buffers": int, "fused_capacity_buffers": int,
                 "rel_err_vs_oracle": _NUM, "overflow_pairs": int}
+# added by the streamed-kernel PR; optional so pre-existing trajectory runs
+# stay valid. fused_us is the STREAMED kernel from that PR on; resident_us
+# is the whole-array-resident variant it replaced.
+PIPELINE_ROW_OPTIONAL = {"resident_us": _NUM, "streamed": bool}
 
 
 SERVING_TOP = {"bench": str, "unit": str, "note": str, "host": dict,
@@ -52,11 +56,14 @@ OBS_ROW = {"engine": str, "decode_steps": int,
            "tok_s_on": _NUM, "tok_s_off": _NUM, "overhead_frac": _NUM}
 
 
-def _check_keys(obj: Dict, schema: Dict, where: str) -> List[str]:
+def _check_keys(obj: Dict, schema: Dict, where: str,
+                optional: Dict = None) -> List[str]:
     errs = []
     if not isinstance(obj, dict):
         return [f"{where}: expected an object, got {type(obj).__name__}"]
-    for key, typ in schema.items():
+    items = list(schema.items()) + [
+        (k, t) for k, t in (optional or {}).items() if k in obj]
+    for key, typ in items:
         if key not in obj:
             errs.append(f"{where}: missing key {key!r}")
         elif typ is int and isinstance(obj[key], bool):
@@ -89,7 +96,8 @@ def validate_pipeline_bench(doc: Dict) -> List[str]:
         if isinstance(run.get("host"), dict):
             errs += _check_keys(run["host"], HOST, f"runs[{i}].host")
         for j, row in enumerate(run.get("rows", []) or []):
-            errs += _check_keys(row, PIPELINE_ROW, f"runs[{i}].rows[{j}]")
+            errs += _check_keys(row, PIPELINE_ROW, f"runs[{i}].rows[{j}]",
+                                optional=PIPELINE_ROW_OPTIONAL)
     return errs
 
 

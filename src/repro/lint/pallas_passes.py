@@ -16,6 +16,7 @@ from ..kernels.specs import KernelSpec
 from .findings import Finding, Severity
 
 VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+SMEM_BUDGET_BYTES = 1024 * 1024
 LANE = 128
 
 # second-to-last-dim multiple for the packed min tile, by dtype itemsize
@@ -24,12 +25,16 @@ _SUBLANE_BY_ITEMSIZE = {4: 8, 2: 16, 1: 32}
 
 def check_vmem_footprint(spec: KernelSpec, entry: str,
                          budget: int = VMEM_BUDGET_BYTES) -> List[Finding]:
-    """Static VMEM working set (streamed blocks double-buffered, resident
-    blocks and scratch counted once) vs the per-core budget. Entry meta
-    ``vmem_budget`` overrides the default 16 MB."""
+    """Static VMEM working set vs the per-core budget, computed from the
+    spec's residency model (``KernelSpec.vmem_bytes``): streamed vmem
+    blocks double-buffered, resident blocks and scratch counted once,
+    SMEM/ANY-space blocks excluded — their cost shows up as the explicit
+    staging scratch the kernel declares. Entry meta ``vmem_budget``
+    overrides the default 16 MB."""
     total = spec.vmem_bytes()
     if total > budget:
-        worst = max(spec.blocks, key=lambda b: b.nbytes)
+        vmem_blocks = spec.blocks_of_space("vmem") or spec.blocks
+        worst = max(vmem_blocks, key=lambda b: b.nbytes)
         return [Finding(
             "pallas-vmem", "vmem-budget", Severity.ERROR, entry,
             f"{spec.name}: estimated VMEM working set "
@@ -37,13 +42,69 @@ def check_vmem_footprint(spec: KernelSpec, entry: str,
             f"budget",
             f"largest block: {worst.name} {worst.shape} {worst.dtype} "
             f"({worst.nbytes / 2**20:.1f} MB) — shrink block_c/block_f or "
-            f"move whole-array operands to ANY memory with explicit DMA")]
+            f"move whole-array operands to ANY memory with explicit DMA "
+            f"(space='any' + staging scratch, as the streamed fused "
+            f"pipeline does)")]
     if total > 0.8 * budget:
         return [Finding(
             "pallas-vmem", "vmem-near-budget", Severity.WARNING, entry,
             f"{spec.name}: estimated VMEM {total / 2**20:.1f} MB is within "
             f"20% of the {budget / 2**20:.0f} MB budget")]
     return []
+
+
+def check_smem_footprint(spec: KernelSpec, entry: str,
+                         budget: int = SMEM_BUDGET_BYTES) -> List[Finding]:
+    """Scalar-memory working set (``space='smem'`` blocks — the
+    scalar-prefetch pair maps) vs the per-core SMEM budget. SMEM is tiny
+    compared to VMEM, so a map that grows with T*K must be checked at
+    prefill scale: the mode-grouped pair layout (T*top_k entries) fits
+    where the raw sub-pair layout (T*top_k*P) would not."""
+    total = spec.smem_bytes()
+    if total > budget:
+        worst = max(spec.blocks_of_space("smem"), key=lambda b: b.nbytes)
+        return [Finding(
+            "pallas-smem", "smem-budget", Severity.ERROR, entry,
+            f"{spec.name}: estimated SMEM working set "
+            f"{total / 2**10:.0f} KB exceeds the {budget / 2**10:.0f} KB "
+            f"budget",
+            f"largest map: {worst.name} {worst.shape} {worst.dtype} — "
+            f"shrink the per-pair maps (mode-grouped layout) or tile them")]
+    if total > 0.8 * budget:
+        return [Finding(
+            "pallas-smem", "smem-near-budget", Severity.WARNING, entry,
+            f"{spec.name}: estimated SMEM {total / 2**10:.0f} KB is within "
+            f"20% of the {budget / 2**10:.0f} KB budget")]
+    return []
+
+
+def check_dma_streaming(spec: KernelSpec, entry: str) -> List[Finding]:
+    """ANY-space blocks are reachable only through explicit DMA, so the
+    spec must declare staging multiplicity: an input with
+    ``dma_buffers == 0`` cannot be read at all (ERROR), a single-buffered
+    input serializes every gather behind compute (WARNING — the whole
+    point of streaming is overlapping the next tile's copy), and outputs
+    need at least one staging buffer for the write-back path."""
+    out: List[Finding] = []
+    for b in spec.blocks_of_space("any"):
+        if b.dma_buffers < 1:
+            out.append(Finding(
+                "pallas-dma", "any-unreachable", Severity.ERROR, entry,
+                f"{spec.name}.{b.name}: ANY-space {b.kind} block declares "
+                f"no DMA staging buffers",
+                "a TPU kernel cannot touch ANY/HBM memory directly — give "
+                "the block dma_buffers >= 1 and a matching VMEM staging "
+                "scratch"))
+        elif b.kind == "in" and b.dma_buffers < 2:
+            out.append(Finding(
+                "pallas-dma", "single-buffered-input", Severity.WARNING,
+                entry,
+                f"{spec.name}.{b.name}: ANY-space input is single-buffered "
+                f"(dma_buffers={b.dma_buffers})",
+                "double-buffer the gather (dma_buffers=2) so the next "
+                "tile's HBM->VMEM copy overlaps the current tile's "
+                "compute"))
+    return out
 
 
 def _full_dim_values(spec: KernelSpec):
@@ -66,7 +127,9 @@ def check_mxu_alignment(spec: KernelSpec, entry: str) -> List[Finding]:
     out: List[Finding] = []
     full = _full_dim_values(spec)
     for b in spec.blocks:
-        if b.control or len(b.shape) < 2:
+        # SMEM maps are scalar data and ANY blocks are touched by row DMA,
+        # not fed to the MXU — only vmem-resident matrix tiles align
+        if b.control or b.space != "vmem" or len(b.shape) < 2:
             continue
         last, sub = b.shape[-1], b.shape[-2]
         sublane = _SUBLANE_BY_ITEMSIZE.get(np.dtype(b.dtype).itemsize, 8)

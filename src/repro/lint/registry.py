@@ -364,12 +364,17 @@ def _kernel_spec_entries() -> List[LintEntry]:
         return Artifacts(kernel_specs=(grouped_swiglu_kernel_spec(
             E, cap, d, fsub, dtype=jnp.bfloat16, p_factor=1),))
 
-    def fused_trace(T):
+    def fused_trace(T, *, d=d, f=fsub, E=E, top_k=top_k):
+        # production fused path at P>1 is mode-grouped: ONE pair per
+        # (token, original expert), so the scalar-prefetch maps carry
+        # T*top_k entries (+ one block of padding) — half the sub-pair
+        # layout at P=2, which is what keeps them inside the SMEM budget
+        # at prefill scale
         def trace():
             cap = capacity_for(T, top_k * P, E, 2.0)
-            n_pairs = T * top_k * P + 128
+            n_pairs = T * top_k + 128
             return Artifacts(kernel_specs=(fused_moe_pipeline_kernel_spec(
-                T, d, fsub, E, n_pairs, capacity=cap, dtype=jnp.bfloat16,
+                T, d, f, E, n_pairs, capacity=cap, dtype=jnp.bfloat16,
                 p_factor=P),))
         return trace
 
@@ -378,12 +383,19 @@ def _kernel_spec_entries() -> List[LintEntry]:
                   _trace=gs_trace),
         LintEntry(name="kernel/fused_pipeline/prod_decode", meta={},
                   _trace=fused_trace(256)),
-        # prefill-scale (T, d) resident blocks blow the VMEM budget — a
-        # KNOWN limitation of the interpret-mode layout, suppressed in
-        # lint_baseline.json (real TPU needs ANY-memory DMA; see the
-        # fused_moe_pipeline_pallas docstring)
+        # prefill scale is CLEAN since the streamed rewrite: pair maps in
+        # scalar-prefetch SMEM, x/out in ANY memory behind double-buffered
+        # DMA, so the VMEM working set no longer grows with T (the old
+        # resident layout blew the budget here ~6x and was suppressed in
+        # lint_baseline.json — the suppression is deleted and a regression
+        # test keeps the unstreamed spec failing)
         LintEntry(name="kernel/fused_pipeline/prod_prefill", meta={},
                   _trace=fused_trace(8192)),
+        # wide-model prefill: Mixtral-class dims (d=4096, 64 experts,
+        # top_k=2) — the acceptance shape for the streamed residency model
+        LintEntry(name="kernel/fused_pipeline/prefill_8k_wide", meta={},
+                  _trace=fused_trace(8192, d=4096, f=14336 // P, E=64,
+                                     top_k=2)),
     ]
 
 

@@ -22,7 +22,8 @@ from .registry import Artifacts, LintEntry, build_entries
 PASS_NAMES = ("jaxpr-dtype", "jaxpr-hostsync", "jaxpr-traced-leaves",
               "policy-retrace",
               "hlo-capacity-buffer", "hlo-collectives", "hlo-hbm",
-              "pallas-vmem", "pallas-mxu", "pallas-grid", "bench-schema")
+              "pallas-vmem", "pallas-smem", "pallas-dma", "pallas-mxu",
+              "pallas-grid", "bench-schema")
 
 DEFAULT_BASELINE = "lint_baseline.json"
 
@@ -108,6 +109,12 @@ def _entry_passes(entry: LintEntry, art: Artifacts,
             out += pallas_passes.check_vmem_footprint(
                 spec, entry.name,
                 meta.get("vmem_budget", pallas_passes.VMEM_BUDGET_BYTES))
+        if want("pallas-smem"):
+            out += pallas_passes.check_smem_footprint(
+                spec, entry.name,
+                meta.get("smem_budget", pallas_passes.SMEM_BUDGET_BYTES))
+        if want("pallas-dma"):
+            out += pallas_passes.check_dma_streaming(spec, entry.name)
         if want("pallas-mxu"):
             out += pallas_passes.check_mxu_alignment(spec, entry.name)
         if want("pallas-grid"):

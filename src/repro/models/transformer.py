@@ -191,7 +191,7 @@ def _moe_forward(p, x, cfg, dist: Optional[DistContext], aux: bool = False,
         capacity=policy.dispatch_capacity(xt.shape[0]),
         use_kernel=policy.use_kernel, return_overflow=True,
         mode_grouped=policy.kernel_mode_grouping,
-        fused_pipeline=getattr(policy, "fused_pipeline", False))
+        fused_pipeline=getattr(policy, "fused_pipeline", None))
     if collect:
         n_sub = p["w1"].shape[0]
         p_factor = pairs.idx.shape[1] // pairs.modes.shape[1]

@@ -167,10 +167,13 @@ def test_counts_major_reaches_kernel_dispatch_path(rng, moe_cfg, moe_params,
     record = []
     monkeypatch.setattr(kops, "grouped_swiglu", _spying_grouped_swiglu(record))
     T = calib_x.shape[0]
+    # fused_pipeline=False pins the buffer-kernel path this test spies on
+    # (auto would pick the fused pipeline here, which never calls
+    # grouped_swiglu)
     y, overflow = moe.moe_forward_dispatch(
         prepared, calib_x, moe_cfg, pairs=pairs, capacity=T,
         use_kernel=True, return_overflow=True,
-        mode_grouped=pol.kernel_mode_grouping)
+        mode_grouped=pol.kernel_mode_grouping, fused_pipeline=False)
     y_ref = moe.moe_forward_ref(prepared, calib_x, moe_cfg, pairs=pairs)
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4)
     assert int(overflow) == 0
@@ -215,6 +218,10 @@ def test_counts_major_reaches_kernel_setp_path(rng, moe_cfg, moe_params,
     FULL-first/MAJOR-only-second and pass counts_major to the kernel, while
     matching the dense reference."""
     prepared, pol, pairs = _two_t_setup(rng, moe_cfg, moe_params, calib_x)
+    # fused_pipeline=False pins the buffer-kernel path this test spies on
+    # (auto would pick the fused pipeline here, which never calls
+    # grouped_swiglu)
+    pol = dataclasses.replace(pol, fused_pipeline=False)
     record = []
     monkeypatch.setattr(kops, "grouped_swiglu", _spying_grouped_swiglu(record))
     mesh = _one_dev_mesh()

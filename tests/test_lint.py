@@ -271,20 +271,74 @@ def test_hbm_bytes_regression_gate():
 # Pallas family
 # ---------------------------------------------------------------------------
 
-def test_vmem_pass_catches_oversized_spec():
-    spec = fused_moe_pipeline_kernel_spec(
-        16384, 2048, 384, 128, 16384 * 16 + 128, capacity=2048,
-        dtype=jnp.bfloat16, p_factor=2)
-    found = pallas_passes.check_vmem_footprint(spec, "seeded")
+def test_vmem_pass_streamed_prefill_passes_unstreamed_fails():
+    """The satellite-1 regression pair: at prefill scale (T=8192) the
+    STREAMED spec (pair maps in SMEM, x/out in ANY memory behind DMA)
+    fits the 16 MB budget, while the deliberately unstreamed (resident)
+    layout still blows it — deleting the old prod_prefill suppression
+    must never silently re-admit a resident prefill kernel."""
+    kw = dict(capacity=2048, dtype=jnp.bfloat16, p_factor=2)
+    T, n_pairs = 8192, 8192 * 8 + 128
+    ok = fused_moe_pipeline_kernel_spec(T, 2048, 384, 128, n_pairs,
+                                        streamed=True, **kw)
+    assert pallas_passes.check_vmem_footprint(ok, "streamed") == []
+    # acceptance shape: wide model (d=4096, E=64) at T=8192 also fits
+    wide = fused_moe_pipeline_kernel_spec(T, 4096, 7168, 64, 8192 * 2 + 128,
+                                          streamed=True, capacity=1024,
+                                          dtype=jnp.bfloat16, p_factor=2)
+    assert pallas_passes.check_vmem_footprint(wide, "streamed-wide") == []
+    bad = fused_moe_pipeline_kernel_spec(T, 2048, 384, 128, n_pairs,
+                                         streamed=False, **kw)
+    found = pallas_passes.check_vmem_footprint(bad, "resident")
     assert any(f.code == "vmem-budget" and f.severity == Severity.ERROR
                for f in found), found
 
 
 def test_vmem_pass_passes_decode_scale():
+    for streamed in (True, False):
+        spec = fused_moe_pipeline_kernel_spec(
+            256, 2048, 384, 128, 256 * 16 + 128, capacity=64,
+            dtype=jnp.bfloat16, p_factor=2, streamed=streamed)
+        assert pallas_passes.check_vmem_footprint(spec, "ok") == []
+
+
+def test_smem_pass_budget_and_clean():
+    # mode-grouped prefill maps fit SMEM
+    ok = fused_moe_pipeline_kernel_spec(
+        8192, 2048, 384, 128, 8192 * 8 + 128, capacity=2048,
+        dtype=jnp.bfloat16, p_factor=2)
+    assert pallas_passes.check_smem_footprint(ok, "ok") == []
+    # a raw sub-pair layout at prefill scale (T*top_k*P entries) does not
+    big = fused_moe_pipeline_kernel_spec(
+        16384, 2048, 384, 128, 16384 * 8 * 2 + 128, capacity=4096,
+        dtype=jnp.bfloat16, p_factor=2)
+    found = pallas_passes.check_smem_footprint(big, "seeded")
+    assert any(f.code == "smem-budget" and f.severity == Severity.ERROR
+               for f in found), found
+    # the resident layout keeps maps in VMEM: nothing for this pass
+    res = fused_moe_pipeline_kernel_spec(
+        64, 2048, 384, 128, 64 * 16 + 128, capacity=64,
+        dtype=jnp.bfloat16, p_factor=2, streamed=False)
+    assert res.smem_bytes() == 0
+    assert pallas_passes.check_smem_footprint(res, "resident") == []
+
+
+def test_dma_pass_requires_staged_double_buffering():
     spec = fused_moe_pipeline_kernel_spec(
         256, 2048, 384, 128, 256 * 16 + 128, capacity=64,
         dtype=jnp.bfloat16, p_factor=2)
-    assert pallas_passes.check_vmem_footprint(spec, "ok") == []
+    assert pallas_passes.check_dma_streaming(spec, "ok") == []
+    tampered = dataclasses.replace(spec, blocks=tuple(
+        dataclasses.replace(b, dma_buffers=1) if b.name == "x" else b
+        for b in spec.blocks))
+    found = pallas_passes.check_dma_streaming(tampered, "seeded")
+    assert any(f.code == "single-buffered-input" for f in found), found
+    dead = dataclasses.replace(spec, blocks=tuple(
+        dataclasses.replace(b, dma_buffers=0) if b.name == "out" else b
+        for b in spec.blocks))
+    found = pallas_passes.check_dma_streaming(dead, "seeded")
+    assert any(f.code == "any-unreachable" and
+               f.severity == Severity.ERROR for f in found), found
 
 
 def test_mxu_pass_catches_misaligned_block():
@@ -324,13 +378,23 @@ def test_kernel_specs_drive_the_launch():
     assert m["pad_c"] == 0 and m["pad_f"] == 0
     assert spec.grid == (4, 1, 1)
     assert m["n_minor_start"] == 48                    # f//2 for even f
-    # double-buffered streamed blocks, single-counted residents/scratch
+    # residency model: double-buffered streamed vmem blocks, single-counted
+    # residents/scratch, SMEM maps and ANY-space arrays off the VMEM books
     fused = fused_moe_pipeline_kernel_spec(8, 16, 16, 2, 40, capacity=8)
-    streamed = sum(2 * b.nbytes for b in fused.blocks
+    vmem = [b for b in fused.blocks if b.space == "vmem"]
+    streamed = sum(2 * b.nbytes for b in vmem
                    if b.streamed and b.kind != "scratch")
-    resident = sum(b.nbytes for b in fused.blocks
+    resident = sum(b.nbytes for b in vmem
                    if not b.streamed or b.kind == "scratch")
     assert fused.vmem_bytes() == streamed + resident
+    assert fused.smem_bytes() == sum(b.nbytes for b in fused.blocks
+                                     if b.space == "smem") > 0
+    anys = {b.name: b for b in fused.blocks_of_space("any")}
+    assert anys["x"].dma_buffers == 2 and anys["out"].dma_buffers == 1
+    # the spec's staging scratch is what the kernel actually allocates:
+    # 2x (block_c, d) gather tiles + accumulator + RMW stage
+    names = {b.name for b in fused.blocks if b.kind == "scratch"}
+    assert names == {"x_tiles", "acc_scratch", "out_stage"}
 
 
 # ---------------------------------------------------------------------------
@@ -393,8 +457,9 @@ def test_runner_fast_matrix_clean_as_landed():
                    "lint_baseline.json")
     assert rep.exit_code == 0, rep.render(verbose=True)
     assert len(rep.entries_run) >= 10
-    assert rep.suppressed, "the documented prod_prefill suppression " \
-        "should have matched something"
+    # the streamed rewrite removed the prod_prefill VMEM suppression — the
+    # matrix must be clean with an EMPTY suppression list
+    assert not rep.suppressed, [f.fingerprint for f in rep.suppressed]
 
 
 def test_runner_survives_broken_entry():
